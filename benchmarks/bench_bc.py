@@ -1,0 +1,52 @@
+"""Paper Figures 5/7/9: BC performance + efficiency vs place count,
+BC-G (GLB) vs BC (static partitioning, the legacy baseline).
+
+The paper's y-axis is edges traversed per second; we report BFS-sweep
+throughput (sweeps = the unit `process` budget counts) and superstep
+efficiency, plus wall time. The R-MAT graph is replicated (paper's
+assumption) and sources are statically partitioned, GLB rebalances.
+"""
+import time
+
+import numpy as np
+
+from repro.core import GLBParams, run_sim
+from repro.problems.bc import bc_problem
+from repro.problems.rmat import rmat_graph
+
+PLACES = (1, 2, 4, 8, 16)
+SCALE = 6
+
+
+def run():
+    rows = []
+    adj, n = rmat_graph(scale=SCALE, seed=7)
+    edges = int(adj.sum())
+    for variant, params in (
+        ("bc_g", GLBParams(n=4, w=2, steal_k=16)),
+        ("bc_static", GLBParams(n=4, no_steal=True)),
+    ):
+        base = None
+        for P in PLACES:
+            prob = bc_problem(adj, capacity=512)
+            t0 = time.time()
+            out = run_sim(prob, P, params, seed=0)
+            dt = time.time() - t0
+            steps = int(out.supersteps)
+            work = np.asarray(out.stats["processed"], np.float64)
+            if base is None:
+                base = steps  # P=1 makespan
+            speedup = base / steps
+            rows.append((
+                f"{variant}_p{P}",
+                dt / max(steps, 1) * 1e6,
+                f"steps={steps};speedup={speedup:.2f};"
+                f"edges_sweeps_s={edges*work.sum()/n/dt:.0f};"
+                f"work_std={work.std():.2f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

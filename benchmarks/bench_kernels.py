@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks: jnp oracle wall times on CPU (what actually
+executes here) + correctness deltas vs the Pallas kernels in interpret
+mode. TPU-side performance is covered by the roofline artifacts
+(EXPERIMENTS.md §Roofline), not CPU timing.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.uts_expand import uts_expand
+from repro.problems.uts import geom_thresholds
+
+
+def _timeit(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    ks = jax.random.split(jax.random.key(0), 5)
+
+    # attention: ref vs chunked (the deployable long-seq path)
+    q = jax.random.normal(ks[0], (2, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 1024, 2, 64), jnp.float32)
+    f_ref = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v))
+    f_chk = jax.jit(lambda q, k, v: ref.attention_chunked(q, k, v))
+    us_ref = _timeit(f_ref, q, k, v)
+    us_chk = _timeit(f_chk, q, k, v)
+    err = float(jnp.abs(f_ref(q, k, v) - f_chk(q, k, v)).max())
+    rows.append(("attn_ref_1k", us_ref, "impl=full"))
+    rows.append(("attn_chunked_1k", us_chk, f"impl=flash_jnp;err={err:.1e}"))
+
+    # pallas flash (interpret) correctness on one shape
+    out = flash_attention(q[:, :256], k[:, :256], v[:, :256], causal=True,
+                          interpret=True, block_q=64, block_k=64)
+    want = ref.attention_ref(q[:, :256], k[:, :256], v[:, :256])
+    rows.append(("attn_pallas_interp", 0.0,
+                 f"err={float(jnp.abs(out-want).max()):.1e}"))
+
+    # ssd: sequential scan vs chunk-matmul form
+    x = jax.random.normal(ks[3], (2, 512, 4, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (2, 512, 4))) * 0.1
+    A = -jnp.ones((4,))
+    B = jax.random.normal(ks[0], (2, 512, 64))
+    C = jax.random.normal(ks[1], (2, 512, 64))
+    f_scan = jax.jit(lambda *a: ref.ssd_ref(*a)[0])
+    f_chunk = jax.jit(lambda *a: ref.ssd_chunked_ref(*a)[0])
+    us_scan = _timeit(f_scan, x, dt, A, B, C)
+    us_chunk = _timeit(f_chunk, x, dt, A, B, C)
+    err = float(jnp.abs(f_scan(x, dt, A, B, C)
+                        - f_chunk(x, dt, A, B, C)).max())
+    rows.append(("ssd_scan_512", us_scan, "impl=sequential"))
+    rows.append(("ssd_chunked_512", us_chunk,
+                 f"impl=chunk_matmul;err={err:.1e};"
+                 f"speedup={us_scan/us_chunk:.1f}x"))
+
+    # uts_expand: jnp ref vs pallas interpret equality
+    thr = jnp.asarray(geom_thresholds(4.0))
+    d0 = jnp.arange(128, dtype=jnp.uint32) * 7919
+    d1 = jnp.arange(128, dtype=jnp.uint32) * 104729
+    base = jnp.zeros(128, jnp.int32)
+    f_exp = jax.jit(lambda *a: ref.uts_expand_ref(*a, 64)[2])
+    us_exp = _timeit(f_exp, d0, d1, base, thr)
+    pk = uts_expand(d0, d1, base, thr, width=64, interpret=True)
+    rk = ref.uts_expand_ref(d0, d1, base, thr, 64)
+    same = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(pk, rk))
+    rows.append(("uts_expand_128x64", us_exp, f"pallas_bitexact={same}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,49 @@
+"""Paper §2.4: the w / z / n tuning space.
+
+"It is more likely to steal from a random victim with larger w ... larger n
+means more tasks before responding" — we sweep each knob on UTS and report
+supersteps (makespan), idle fraction and steal mix, the quantities the
+paper's GLB log exposes for tuning.
+"""
+import time
+
+import numpy as np
+
+from repro.core import GLBParams, run_sim
+from repro.problems.uts import uts_problem
+
+P = 16
+DEPTH = 8
+
+
+def _one(tag, params):
+    prob = uts_problem(4.0, DEPTH, 19)
+    t0 = time.time()
+    out = run_sim(prob, P, params, seed=0)
+    dt = time.time() - t0
+    st = {k: np.asarray(v, np.float64) for k, v in out.stats.items()}
+    steps = int(out.supersteps)
+    idle = st["idle_steps"].sum() / max(steps * P, 1)
+    return (
+        f"params_{tag}",
+        dt / max(steps, 1) * 1e6,
+        f"steps={steps};idle_frac={idle:.3f};"
+        f"rand={int(st['steals_random'].sum())};"
+        f"life={int(st['steals_lifeline'].sum())}",
+    )
+
+
+def run():
+    rows = []
+    for w in (0, 1, 2, 4, 8):
+        rows.append(_one(f"w{w}", GLBParams(n=64, w=w, steal_k=32)))
+    for z in (1, 2, 4):
+        rows.append(_one(f"z{z}", GLBParams(n=64, w=1, z=z, steal_k=32)))
+    for n in (16, 64, 256, 1024):
+        rows.append(_one(f"n{n}", GLBParams(n=n, w=2, steal_k=32)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

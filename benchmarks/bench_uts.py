@@ -1,0 +1,50 @@
+"""Paper Figures 2/3/4: UTS throughput + efficiency vs place count.
+
+The paper plots nodes/s (primary axis) and per-place efficiency (secondary
+axis) on Power 775 / BG/Q / K. On one CPU core the honest analogues are:
+  - wall nodes/s (for reference),
+  - superstep efficiency = nodes / (supersteps * P * n): the fraction of
+    available work slots actually used — this is what the paper's per-place
+    efficiency measures (idle + steal overhead), and it is hardware-neutral.
+Two lines: UTS-G (full lifeline algorithm) and UTS-R (random-only stealing,
+the classic work-stealing baseline the lifeline paper improves on).
+"""
+import time
+
+import numpy as np
+
+from repro.core import GLBParams, run_sim
+from repro.problems.uts import uts_oracle, uts_problem
+
+PLACES = (1, 2, 4, 8, 16, 32)
+DEPTH = 9
+
+
+def run():
+    rows = []
+    oracle = uts_oracle(4.0, DEPTH, 19)
+    for variant, params in (
+        ("uts_g", GLBParams(n=256, w=2, steal_k=64)),
+        ("uts_random_only", GLBParams(n=256, w=2, z=1, steal_k=64)),
+    ):
+        for P in PLACES:
+            prob = uts_problem(4.0, DEPTH, 19)
+            t0 = time.time()
+            out = run_sim(prob, P, params, seed=0)
+            dt = time.time() - t0
+            assert int(out.result) == oracle, (variant, P)
+            steps = int(out.supersteps)
+            eff = oracle / (steps * P * params.n)
+            proc = np.asarray(out.stats["processed"], np.float64)
+            rows.append((
+                f"{variant}_p{P}",
+                dt / steps * 1e6,  # us per superstep
+                f"eff={eff:.3f};nodes_s={oracle/dt:.0f};steps={steps};"
+                f"work_std_over_mean={proc.std()/max(proc.mean(),1e-9):.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,47 @@
+"""Benchmark orchestrator — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV.
+
+  bench_uts              — Fig 2/3/4: UTS-G scaling + efficiency
+  bench_bc               — Fig 5/7/9: BC-G vs static scaling
+  bench_bc_distribution  — Fig 6/8/10: workload distribution std-dev
+  bench_params           — §2.4: w/z/n tuning space
+  bench_kernels          — Pallas kernels vs oracles + CPU timings
+  bench_moe_glb          — GLB applied to MoE expert placement
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_bc, bench_bc_distribution, bench_kernels, bench_moe_glb,
+        bench_params, bench_uts,
+    )
+
+    modules = [
+        ("uts_scaling", bench_uts),
+        ("bc_scaling", bench_bc),
+        ("bc_distribution", bench_bc_distribution),
+        ("glb_params", bench_params),
+        ("kernels", bench_kernels),
+        ("moe_glb", bench_moe_glb),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name},nan,ERROR", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""BC-G (paper §2.6): exact Brandes betweenness centrality on an SSCA2
+R-MAT graph, GLB vs static partitioning — reproduces the paper's
+workload-distribution comparison (Fig 6/8/10) in miniature.
+
+    PYTHONPATH=src python examples/bc_demo.py [scale] [P]
+"""
+import sys
+
+import numpy as np
+
+from repro.core import GLBParams, run_sim
+from repro.problems.bc import bc_problem
+from repro.problems.rmat import brandes_bc_oracle, rmat_graph
+
+
+def main():
+    scale = int(sys.argv[1]) if len(sys.argv) > 1 else 6
+    P = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+
+    adj, n = rmat_graph(scale=scale, seed=7)
+    print(f"R-MAT scale={scale}: N={n}, edges={int(adj.sum())}")
+    prob = bc_problem(adj, capacity=512)
+
+    glb = run_sim(prob, P, GLBParams(n=4, steal_k=16), seed=0)
+    static = run_sim(prob, P, GLBParams(n=4, no_steal=True), seed=0)
+
+    bc = np.asarray(glb.result)
+    if n <= 128:
+        oracle = brandes_bc_oracle(adj)
+        err = np.abs(bc - oracle).max()
+        print(f"vs Brandes oracle: max abs err {err:.2e}")
+    top = np.argsort(bc)[-5:][::-1]
+    print("top-5 betweenness vertices:", top.tolist())
+
+    for name, r in (("BC-G (GLB)", glb), ("BC (static)", static)):
+        w = np.asarray(r.stats["processed"], np.float64)
+        print(f"{name:12s}: makespan={int(r.supersteps):5d} supersteps, "
+              f"work mean={w.mean():8.1f} std={w.std():8.2f}")
+    np.testing.assert_allclose(
+        np.asarray(glb.result), np.asarray(static.result), rtol=1e-4,
+        atol=1e-3,
+    )
+    print("results identical; GLB flattens the distribution "
+          "(paper Fig 6/8/10).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""GLB quickstart — the paper's appendix Fibonacci example, verbatim in
+spirit: provide process/split/merge/result + a root `init`, call run().
+
+    PYTHONPATH=src python examples/quickstart.py [N] [P]
+"""
+import sys
+
+from repro.core import GLB, GLBParams
+from repro.problems.fib import fib_oracle, fib_problem
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 18
+    P = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+
+    glb = GLB(fib_problem(n), GLBParams(n=32, w=2, steal_k=32), P=P)
+    result = glb.run(seed=0)
+    print(f"fib-glb({n}) = {int(result)}   (oracle: {fib_oracle(n)})")
+    print(f"supersteps: {glb.supersteps}")
+    print(glb.stats_summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Roofline analysis: HLO collective parsing + term derivation + reports."""

@@ -1,0 +1,91 @@
+"""Optimized-HLO text analysis: collective-op operand bytes.
+
+cost_analysis() gives FLOPs and bytes-accessed but no collective traffic;
+we parse the post-SPMD optimized HLO and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(including their async -start forms; -done forms are skipped to avoid double
+counting).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+# %name = dtype[dims]{layout} opcode(...)
+_DEF_RE = re.compile(
+    r"%?([\w\.\-]+)\s*=\s*\(?\s*([a-z0-9]+)\[([0-9,]*)\]"
+)
+# inline-typed operand: dtype[dims]{...} %name
+_OPND_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+%?([\w\.\-]+)")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = DTYPE_BYTES[dtype]
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-opcode operand bytes of collective ops in one (per-device) module.
+
+    Returns {"all-reduce": bytes, ..., "total": bytes, "count": n_ops}."""
+    sizes: Dict[str, int] = {}
+    out: Dict[str, int] = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            sizes[m.group(1)] = _nbytes(m.group(2), m.group(3))
+        stripped = line.strip()
+        for op in COLLECTIVES:
+            token = f" {op}("
+            token_start = f" {op}-start("
+            if token in stripped or token_start in stripped:
+                if f" {op}-done(" in stripped:
+                    continue
+                # operand list between the first '(' after opcode and its ')'
+                idx = stripped.index(token_start if token_start in stripped
+                                     else token)
+                args = stripped[idx:]
+                args = args[args.index("(") + 1:]
+                depth = 1
+                end = 0
+                for i, ch in enumerate(args):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                args = args[:end]
+                b = 0
+                inline = _OPND_RE.findall(args)
+                if inline:
+                    for dt, dims, _name in inline:
+                        b += _nbytes(dt, dims)
+                else:
+                    for name in re.findall(r"%?([\w\.\-]+)", args):
+                        b += sizes.get(name, 0)
+                out[op] += b
+                count += 1
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVES if k in out)
+    out["count"] = count
+    return dict(out)

@@ -1,0 +1,106 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+artifacts JSON written by launch/dryrun.py.
+
+  PYTHONPATH=src python -m repro.analysis.report artifacts/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import defaultdict
+
+
+def load(dirpath: str):
+    recs = []
+    for f in sorted(os.listdir(dirpath)):
+        if f.endswith(".json"):
+            with open(os.path.join(dirpath, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile_s | HBM/dev (args+tmp) | collectives (per-dev module) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | SKIP (full-attn "
+                f"500k, per spec) | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | ERROR "
+                f"{r.get('error','')[:60]} | — | — | — |"
+            )
+            continue
+        ma = r.get("memory_analysis", {})
+        hbm = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0)
+               + ma.get("output_size_in_bytes", 0)
+               - ma.get("alias_size_in_bytes", 0))
+        cb = r.get("collective_bytes", {})
+        coll = "+".join(
+            f"{k.split('-')[-1][:4]}:{fmt_bytes(v)}"
+            for k, v in sorted(cb.items())
+            if k not in ("total", "count") and v
+        )
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+            f"{r['compile_s']} | {fmt_bytes(hbm)} | {coll or '-'} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | bottleneck | t_comp (s) | t_mem (s) | t_coll (s) |"
+        " useful ratio | roofline frac | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("multi_pod") or r["status"] != "ok":
+            continue
+        ro = r.get("roofline", {})
+        note = ""
+        cx = r.get("cost_extrapolated")
+        if cx:
+            note = cx.get("correction_note", "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | **{ro.get('bottleneck','-')}** |"
+            f" {ro.get('t_compute_s','-')} | {ro.get('t_memory_s','-')} |"
+            f" {ro.get('t_collective_s','-')} | {ro.get('useful_ratio','-')} |"
+            f" {ro.get('roofline_frac','-')} | {note} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    recs = load(d)
+    ok = sum(r["status"] == "ok" for r in recs)
+    skip = sum(r["status"] == "skipped" for r in recs)
+    err = sum(r["status"] == "error" for r in recs)
+    print(f"## Dry-run summary: {ok} ok, {skip} skipped (per spec), "
+          f"{err} errors, {len(recs)} cells\n")
+    print("### §Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n### §Roofline (single-pod 16x16, 256 chips)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

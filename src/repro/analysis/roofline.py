@@ -1,0 +1,97 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute    = HLO_FLOPs(per device) / peak_FLOP/s
+  memory     = HLO_bytes(per device) / HBM_bw
+  collective = collective operand bytes(per device) / link_bw
+
+cost_analysis() and the parsed HLO both describe the per-device (post-SPMD)
+module, so the spec's "X / (chips * BW)" with global X reduces to the
+per-device form used here. MODEL_FLOPS = 6*N*D (6*N_active*D for MoE)
+flags remat/redundancy waste via the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip), per the assignment.
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_LINK_BW = 50e9       # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    bytes_accessed: float        # per-device HLO bytes
+    collective: Dict[str, int]   # per-device collective operand bytes
+    chips: int
+    model_flops: float           # 6*N(active)*tokens, GLOBAL
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0    # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_frac: float = 0.0   # useful work / (dominant time * peak)
+
+    def finalize(self) -> "Roofline":
+        self.t_compute = self.flops / PEAK_FLOPS
+        self.t_memory = self.bytes_accessed / HBM_BW
+        self.t_collective = self.collective.get("total", 0) / ICI_LINK_BW
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo = self.flops * self.chips
+        self.useful_ratio = (self.model_flops / total_hlo) if total_hlo else 0.0
+        t_dom = max(terms.values())
+        if t_dom > 0:
+            # fraction of the compute roofline the step achieves if the
+            # dominant term fully serializes (upper-bound-style estimate)
+            self.roofline_frac = (
+                self.model_flops / self.chips / PEAK_FLOPS
+            ) / t_dom
+        return self
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "bottleneck": self.bottleneck,
+            "useful_ratio": round(self.useful_ratio, 4),
+            "roofline_frac": round(self.roofline_frac, 4),
+            "hlo_gflops_per_dev": round(self.flops / 1e9, 2),
+            "hlo_gbytes_per_dev": round(self.bytes_accessed / 1e9, 3),
+            "coll_mbytes_per_dev": round(
+                self.collective.get("total", 0) / 1e6, 3
+            ),
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D with D = tokens this step; MoE uses active params. Training
+    counts fwd+bwd (the 6x); prefill/decode use the 2x forward-only factor."""
+    n = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: 1 token/seq
+
+
+def build(compiled, hlo_collective: Dict[str, int], chips: int,
+          mflops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    return Roofline(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collective=hlo_collective,
+        chips=chips,
+        model_flops=mflops,
+    ).finalize()

@@ -1,0 +1,5 @@
+"""Assigned-architecture configs (exact published dims) + registry."""
+from .registry import ARCHS, get_config, input_specs, cell_applicable
+from repro.models.config import SHAPES
+
+__all__ = ["ARCHS", "get_config", "input_specs", "cell_applicable", "SHAPES"]

@@ -1,0 +1,96 @@
+"""Architecture registry: --arch <id> resolution + input_specs per shape.
+
+input_specs() returns ShapeDtypeStruct stand-ins for every model input of a
+given (arch, shape) cell — weak-type-correct, shardable, zero allocation —
+which is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+
+from .musicgen_medium import CONFIG as musicgen_medium
+from .tinyllama_1_1b import CONFIG as tinyllama_1_1b
+from .qwen1_5_110b import CONFIG as qwen1_5_110b
+from .mistral_nemo_12b import CONFIG as mistral_nemo_12b
+from .qwen2_1_5b import CONFIG as qwen2_1_5b
+from .zamba2_7b import CONFIG as zamba2_7b
+from .mamba2_130m import CONFIG as mamba2_130m
+from .qwen2_vl_2b import CONFIG as qwen2_vl_2b
+from .moonshot_v1_16b_a3b import CONFIG as moonshot_v1_16b_a3b
+from .phi3_5_moe_42b import CONFIG as phi3_5_moe_42b
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        musicgen_medium,
+        tinyllama_1_1b,
+        qwen1_5_110b,
+        mistral_nemo_12b,
+        qwen2_1_5b,
+        zamba2_7b,
+        mamba2_130m,
+        qwen2_vl_2b,
+        moonshot_v1_16b_a3b,
+        phi3_5_moe_42b,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k decode runs only for bounded-state archs (spec)."""
+    if shape.name.startswith("long") and not cfg.supports_long_context:
+        return False, (
+            "skipped: pure full-attention arch — a 524288-token KV cache "
+            "decode is reserved for ssm/hybrid archs per spec (DESIGN.md §8)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for the cell's step function inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    i32, bf16 = jnp.int32, jnp.bfloat16
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            return {
+                "embeds": f((B, S, cfg.d_model), bf16),
+                "positions": f((B, S, 3), i32),
+                "labels": f((B, S), i32),
+            }
+        if cfg.n_codebooks:
+            return {"tokens": f((B, S, cfg.n_codebooks), i32)}
+        return {"tokens": f((B, S), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            return {
+                "embeds": f((B, S, cfg.d_model), bf16),
+                "positions": f((B, S, 3), i32),
+            }
+        if cfg.n_codebooks:
+            return {"tokens": f((B, S, cfg.n_codebooks), i32)}
+        return {"tokens": f((B, S), i32)}
+
+    # decode: one new token against a cache of size S
+    from repro.models.transformer import make_cache, n_attn_caches
+
+    cache = jax.eval_shape(lambda: make_cache(cfg, B, S))
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    return {
+        "tokens": f(tok_shape, i32),
+        "cache": cache,
+        "cache_len": f((), i32),
+    }

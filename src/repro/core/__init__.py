@@ -1,0 +1,32 @@
+"""repro.core — the paper's contribution: lifeline-based global load balancing.
+
+Layout:
+  params.py    — GLBParams (the paper's w / z / n tunables + packet caps)
+  taskbag.py   — array-backed TaskBag (the paper's default ArrayList bag)
+  problem.py   — the TaskQueue/TaskBag user contract as pure-jnp functions
+  lifeline.py  — lifeline topology + the deterministic steal matching
+  scheduler.py — global-view superstep loop (simulated places)
+  executor.py  — shard_map distributed executor (real mesh, collectives)
+  stats.py     — the paper's per-worker logging counters
+  api.py       — GLB facade (paper's ``GLB.run``)
+"""
+from .api import GLB
+from .params import GLBParams
+from .problem import GLBProblem
+from .scheduler import run_sim, GLBRun
+from .executor import run_shardmap, lower_shardmap, GLBDistRun
+from .lifeline import lifeline_buddies, lifeline_mask, match_steals
+
+__all__ = [
+    "GLB",
+    "GLBParams",
+    "GLBProblem",
+    "GLBRun",
+    "GLBDistRun",
+    "run_sim",
+    "run_shardmap",
+    "lower_shardmap",
+    "lifeline_buddies",
+    "lifeline_mask",
+    "match_steals",
+]

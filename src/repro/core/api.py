@@ -1,0 +1,85 @@
+"""Public GLB API — mirrors the paper's ``new GLB[...](init, params); glb.run(start)``.
+
+Users hand over a :class:`~repro.core.problem.GLBProblem` (the TaskQueue/
+TaskBag contract) and pick an execution mode:
+
+  mode="sim"       — P virtual places on the local device(s); used by the
+                     paper-figure benchmarks to sweep place counts.
+  mode="shard_map" — one place per device on a mesh axis; the production
+                     path, lowered at 512 devices by the multi-pod dry-run.
+
+Example (the paper's appendix, see examples/quickstart.py)::
+
+    from repro.core import GLB, GLBParams
+    from repro.problems.fib import fib_problem
+
+    glb = GLB(fib_problem(n=20), GLBParams(n=32), P=8)
+    result = glb.run(seed=0)
+    print(result, glb.stats_summary())
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from .executor import run_shardmap
+from .params import GLBParams
+from .problem import GLBProblem
+from .scheduler import run_sim
+from .stats import summarize
+
+
+class GLB:
+    def __init__(
+        self,
+        problem: GLBProblem,
+        params: GLBParams = GLBParams(),
+        P: Optional[int] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        axis: str = "place",
+        mode: str = "sim",
+        routing: str = "dense",
+    ):
+        if mode == "sim" and P is None:
+            raise ValueError("sim mode needs P (number of virtual places)")
+        if mode == "shard_map" and mesh is None:
+            raise ValueError("shard_map mode needs a mesh")
+        self.problem = problem
+        self.params = params
+        self.P = P if P is not None else int(mesh.shape[axis])
+        self.mesh = mesh
+        self.axis = axis
+        self.mode = mode
+        self.routing = routing
+        self.last_run = None
+
+    def run(self, seed: int = 0) -> Any:
+        if self.mode == "sim":
+            out = run_sim(self.problem, self.P, self.params, seed=seed)
+        else:
+            out = run_shardmap(
+                self.problem, self.mesh, self.params, seed=seed,
+                axis=self.axis, routing=self.routing,
+            )
+        self.last_run = jax.device_get(out)
+        if not bool(np.asarray(self.last_run.converged)):
+            raise RuntimeError(
+                f"GLB hit max_supersteps={self.params.max_supersteps} without "
+                "draining; raise the bound or check capacity/steal settings"
+            )
+        return self.last_run.result
+
+    @property
+    def stats(self):
+        return None if self.last_run is None else self.last_run.stats
+
+    @property
+    def supersteps(self) -> int:
+        return -1 if self.last_run is None else int(self.last_run.supersteps)
+
+    def stats_summary(self) -> str:
+        if self.last_run is None:
+            return "<not run>"
+        return summarize(self.last_run.stats, self.supersteps)

@@ -1,0 +1,289 @@
+"""Distributed GLB executor — shard_map over a real device mesh axis.
+
+Same superstep semantics as ``scheduler.run_sim`` (asserted equivalent in
+tests), but in per-place view with explicit collectives, which is what runs
+on a pod and what the dry-run lowers at 512 devices:
+
+  sizes    : ``lax.all_gather``  of one i32 per place          (steal requests)
+  matching : replicated-deterministic (identical inputs everywhere)
+  packets  : one ``lax.all_to_all`` over a (P, K, item) buffer (baseline
+             routing; every unmatched row is zeros). See EXPERIMENTS.md §Perf
+             for the hypercube-routed optimization that cuts these bytes.
+  result   : ``lax.psum`` (or gather+fold) — the paper's ``reduce()``.
+
+Determinism: the matching consumes only replicated values (gathered sizes,
+superstep-folded key, pending matrix), so every device computes the identical
+schedule — the APGAS request/response protocol with zero protocol messages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .lifeline import lifeline_buddies, match_steals
+from .params import GLBParams
+from .problem import GLBProblem
+from .stats import FIELDS, init_stats
+
+
+class GLBDistRun(NamedTuple):
+    result: Any
+    per_place: Any
+    stats: Dict[str, jax.Array]
+    supersteps: jax.Array
+    converged: jax.Array
+
+
+def _select(cond: jax.Array, a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
+def _route_dense(packet, dst_mine, src_mine, give, axis):
+    """Baseline routing: (P, K, item) all_to_all, zeros off the matched row."""
+    Psize = lax.axis_size(axis)
+    dstc = jnp.clip(dst_mine, 0, Psize - 1)
+
+    def scatter_row(v):
+        buf = jnp.zeros((Psize,) + v.shape, v.dtype)
+        row = jnp.where(
+            jnp.asarray(give).reshape((1,) * v.ndim), v, jnp.zeros_like(v)
+        )
+        return buf.at[dstc].set(row)
+
+    buf_items = {k: scatter_row(v) for k, v in packet["items"].items()}
+    buf_count = (
+        jnp.zeros((Psize,), jnp.int32)
+        .at[dstc]
+        .set(jnp.where(give, packet["count"], 0))
+    )
+    r_items = {
+        k: lax.all_to_all(v, axis, 0, 0, tiled=True) for k, v in buf_items.items()
+    }
+    r_count = lax.all_to_all(buf_count, axis, 0, 0, tiled=True)
+
+    take = src_mine >= 0
+    srcc = jnp.clip(src_mine, 0, Psize - 1)
+    return {
+        "items": {k: v[srcc] for k, v in r_items.items()},
+        "count": jnp.where(take, r_count[srcc], 0),
+    }
+
+
+def _route_lifeline_split(packet_ll, packet_rd, m, me, give_ll, give_rd,
+                          axis, Psize, z):
+    """Optimized routing (beyond-paper, EXPERIMENTS.md §Perf): lifeline
+    steals always travel along a *static* edge — thief t's buddy i sits at
+    (t + 2^i) mod P, so the packet hops exactly -2^i. One masked ``ppermute``
+    per lifeline dimension routes all lifeline traffic collision-free
+    (in-degree 1 per dimension). Only random-round steals keep the dense
+    all_to_all, over a slimmer packet. Wire bytes drop from O(P·K) to
+    O(z·K + P·K_rand) per place per superstep."""
+    t_of_me = m.dst[me]                       # thief I serve (-1 none)
+    dim_dist = (me - t_of_me) % Psize         # lifeline jump if serving one
+
+    acc = {k: jnp.zeros_like(v) for k, v in packet_ll["items"].items()}
+    acc_count = jnp.zeros((), jnp.int32)
+    i_receive_ll = (m.src[me] >= 0) & m.via_lifeline[me]
+
+    for i in range(z):
+        # z = ceil(log2 P) keeps every jump 2^i < P, so jumps are distinct
+        # and a receiver has in-degree exactly one per dimension.
+        perm = [(p, (p - (1 << i)) % Psize) for p in range(Psize)]
+        send_i = give_ll & (dim_dist == (1 << i))
+
+        def ship(v, send=send_i):
+            mask = jnp.asarray(send).reshape((1,) * v.ndim)
+            return lax.ppermute(jnp.where(mask, v, jnp.zeros_like(v)), axis, perm)
+
+        got = {k: ship(v) for k, v in packet_ll["items"].items()}
+        got_count = lax.ppermute(jnp.where(send_i, packet_ll["count"], 0),
+                                 axis, perm)
+        # My buddy i is (me + 2^i); it sent iff it serves me via a lifeline.
+        mine_i = i_receive_ll & (m.src[me] == (me + (1 << i)) % Psize)
+        acc = {k: acc[k] + jnp.where(mine_i, got[k], jnp.zeros_like(got[k]))
+               for k in acc}
+        acc_count = acc_count + jnp.where(mine_i, got_count, 0)
+
+    if packet_rd is None:  # pure-lifeline mode (w == 0)
+        return {"items": acc, "count": acc_count}, None
+    # Random-round remainder via the dense buffer, narrow packet.
+    src_rd = jnp.where(m.via_lifeline[me], -1, m.src[me])
+    inpkt_rd = _route_dense(packet_rd, m.dst[me], src_rd, give_rd, axis)
+    return {"items": acc, "count": acc_count}, inpkt_rd
+
+
+def build_place_fn(problem: GLBProblem, Psize: int, params: GLBParams,
+                   axis: str, routing: str = "dense"):
+    """Per-device GLB loop; call under shard_map/jit with a replicated key."""
+    z = params.resolve_z(Psize)
+    buddies_np = lifeline_buddies(Psize, z)
+    max_steps = params.max_supersteps
+
+    def place_fn(key):
+        buddies = jnp.asarray(buddies_np)
+        me = lax.axis_index(axis)
+        state, bag = problem.init_place(me, Psize)
+        carry = dict(
+            state=state,
+            bag=bag,
+            pending=jnp.zeros((Psize, Psize), bool),
+            step=jnp.zeros((), jnp.int32),
+            done=jnp.zeros((), bool),
+            stats={f: jnp.zeros((), jnp.int32) for f in FIELDS},
+        )
+
+        def cond(c):
+            return (~c["done"]) & (c["step"] < max_steps)
+
+        def body(c):
+            state, bag, processed = problem.process(c["state"], c["bag"], params.n)
+            my_size = bag["size"]
+            if problem.work_in_state is not None:
+                my_pend = problem.work_in_state(state).astype(jnp.int32)
+            else:
+                my_pend = jnp.zeros((), jnp.int32)
+            # One gather carries both the stealable size and in-progress work.
+            gathered = lax.all_gather(jnp.stack([my_size, my_pend]), axis)
+            sizes, pend = gathered[:, 0], gathered[:, 1]
+            hungry_all = (sizes + pend) == 0
+            hungry = hungry_all[me]
+
+            k_step = jax.random.fold_in(key, c["step"])
+            m = match_steals(sizes, hungry_all, c["pending"], k_step, buddies,
+                             params)
+
+            thief = m.dst[me]
+            give = thief >= 0
+            if routing == "dense":
+                bag_split, packet = problem.split(bag, params.steal_k)
+                bag = _select(give, bag_split, bag)
+                sent = jnp.where(give, packet["count"], 0)
+                inpkt = _route_dense(packet, thief, m.src[me], give, axis)
+                bag = problem.merge(bag, inpkt)
+            elif routing == "lifeline":
+                k_rand = params.steal_k_random or params.steal_k
+                thief_c = jnp.clip(thief, 0, Psize - 1)
+                give_ll = give & m.via_lifeline[thief_c]
+                give_rd = give & ~m.via_lifeline[thief_c]
+                bag_ll, packet_ll = problem.split(bag, params.steal_k)
+                packet_ll["count"] = jnp.where(give_ll, packet_ll["count"], 0)
+                if params.w == 0:
+                    # pure-lifeline mode: every steal is single-hop static —
+                    # the dense dynamic-routing buffer disappears entirely
+                    bag = _select(give_ll, bag_ll, bag)
+                    sent = packet_ll["count"]
+                    inpkt_ll, _ = _route_lifeline_split(
+                        packet_ll, None, m, me, give_ll, None,
+                        axis, Psize, z)
+                    bag = problem.merge(bag, inpkt_ll)
+                    inpkt = {"count": inpkt_ll["count"]}
+                else:
+                    bag_rd, packet_rd = problem.split(bag, k_rand)
+                    packet_rd["count"] = jnp.where(give_rd,
+                                                   packet_rd["count"], 0)
+                    bag = _select(give_ll, bag_ll,
+                                  _select(give_rd, bag_rd, bag))
+                    sent = packet_ll["count"] + packet_rd["count"]
+                    inpkt_ll, inpkt_rd = _route_lifeline_split(
+                        packet_ll, packet_rd, m, me, give_ll, give_rd,
+                        axis, Psize, z)
+                    bag = problem.merge(problem.merge(bag, inpkt_ll),
+                                        inpkt_rd)
+                    inpkt = {"count": inpkt_ll["count"] + inpkt_rd["count"]}
+            else:
+                raise ValueError(f"unknown routing {routing!r}")
+
+            done = (sizes.sum() + pend.sum()) == 0
+
+            got = m.src[me] >= 0
+            st = c["stats"]
+            stats = dict(
+                processed=st["processed"] + processed.astype(jnp.int32),
+                active_steps=st["active_steps"] + (processed > 0),
+                idle_steps=st["idle_steps"] + hungry,
+                steals_random=st["steals_random"] + (got & ~m.via_lifeline[me]),
+                steals_lifeline=st["steals_lifeline"] + (got & m.via_lifeline[me]),
+                served=st["served"] + give,
+                items_sent=st["items_sent"] + sent,
+                items_recv=st["items_recv"] + inpkt["count"],
+                lifeline_regs=st["lifeline_regs"]
+                + (m.pending[me] & ~c["pending"][me]).any(),
+                max_size=jnp.maximum(st["max_size"], bag["size"]),
+            )
+            return dict(state=state, bag=bag, pending=m.pending,
+                        step=c["step"] + 1, done=done, stats=stats)
+
+        out = lax.while_loop(cond, body, carry)
+        local = problem.result(out["state"])
+        if problem.reduce_op == "sum":
+            result = jax.tree.map(lambda x: lax.psum(x, axis), local)
+        elif problem.reduce_op == "max":
+            result = jax.tree.map(lambda x: lax.pmax(x, axis), local)
+        elif problem.reduce_op == "min":
+            result = jax.tree.map(lambda x: lax.pmin(x, axis), local)
+        else:
+            raise ValueError(problem.reduce_op)
+        # Per-place outputs get a leading axis of 1 so out_specs can shard
+        # them back onto the place axis.
+        lead = lambda t: jax.tree.map(lambda x: x[None], t)
+        return GLBDistRun(
+            result=result,
+            per_place=lead(local),
+            stats=lead(out["stats"]),
+            supersteps=out["step"],
+            converged=out["done"],
+        )
+
+    return place_fn
+
+
+def run_shardmap(
+    problem: GLBProblem,
+    mesh: Mesh,
+    params: GLBParams = GLBParams(),
+    seed: int = 0,
+    axis: str = "place",
+    routing: str = "dense",
+) -> GLBDistRun:
+    Psize = mesh.shape[axis]
+    place_fn = build_place_fn(problem, Psize, params, axis, routing)
+    shmapped = jax.shard_map(
+        place_fn,
+        mesh=mesh,
+        in_specs=P(),  # replicated key
+        out_specs=GLBDistRun(
+            result=P(),
+            per_place=P(axis),
+            stats=P(axis),
+            supersteps=P(),
+            converged=P(),
+        ),
+        check_vma=False,
+    )
+    return jax.jit(shmapped)(jax.random.key(seed))
+
+
+def lower_shardmap(problem, mesh, params, axis="place", routing="dense"):
+    """AOT lowering entry point used by the multi-pod dry-run."""
+    Psize = mesh.shape[axis]
+    place_fn = build_place_fn(problem, Psize, params, axis, routing)
+    shmapped = jax.shard_map(
+        place_fn,
+        mesh=mesh,
+        in_specs=P(),
+        out_specs=GLBDistRun(
+            result=P(),
+            per_place=P(axis),
+            stats=P(axis),
+            supersteps=P(),
+            converged=P(),
+        ),
+        check_vma=False,
+    )
+    key = jax.eval_shape(lambda: jax.random.key(0))
+    return jax.jit(shmapped).lower(key)

@@ -1,0 +1,148 @@
+"""Lifeline topology + deterministic steal matching (paper §2.4, [23]).
+
+The paper's protocol is asynchronous: an idle worker sends steal requests to
+up to ``w`` random victims, then to its ``z`` lifeline buddies (a
+z-dimensional hypercube); a buddy without work *remembers* the request and
+pushes work when it gets some.
+
+TPU adaptation (DESIGN.md §2): every place holds identical replicated inputs
+each superstep — the gathered size vector, a superstep-folded PRNG key, and
+the pending-lifeline matrix — so the request/response protocol collapses into
+a *deterministic matching* computed redundantly on all places. The matching
+pairs each hungry thief with at most one victim and each victim with at most
+one thief per superstep (a partial permutation, which is what the collective
+transfer layer routes).
+
+Matching passes, in order:
+  1. pending-lifeline service — buddies that now have work serve their oldest
+     remembered request (the paper's "remember and push later");
+  2. random round — each still-hungry thief tries its w fresh random victims;
+  3. lifeline round — each still-hungry thief tries its z buddies in
+     dimension order; unsatisfied edges are recorded in ``pending``.
+
+Greedy conflict resolution iterates thieves in place order — deterministic,
+and identical on every place. Thieves that received work have their pending
+rows cleared (they are alive again).
+
+Topology: buddy_i(p) = (p + 2^i) mod P for i < z — the standard cyclic
+generalization of the hypercube used so P need not be a power of two; for
+P = 2^z it is graph-isomorphic to the paper's hypercube (connected, degree z,
+diameter <= z).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .params import GLBParams
+
+
+def lifeline_buddies(P: int, z: int) -> np.ndarray:
+    """Static (P, z) buddy table: buddy_i(p) = (p + 2^i) mod P."""
+    p = np.arange(P)[:, None]
+    i = np.arange(z)[None, :]
+    return ((p + (1 << i)) % P).astype(np.int32)
+
+
+def lifeline_mask(P: int, z: int) -> np.ndarray:
+    """(P, P) bool — m[t, v] iff v is a lifeline buddy of t."""
+    buddies = lifeline_buddies(P, z)
+    m = np.zeros((P, P), dtype=bool)
+    for t in range(P):
+        m[t, buddies[t]] = True
+    return m
+
+
+class MatchResult(NamedTuple):
+    src: jax.Array           # (P,) i32 — victim each thief receives from, -1 none
+    dst: jax.Array           # (P,) i32 — thief each victim sends to, -1 none
+    via_lifeline: jax.Array  # (P,) bool — thief matched via a lifeline edge
+    pending: jax.Array       # (P, P) bool — updated pending-lifeline matrix
+
+
+def match_steals(
+    sizes: jax.Array,        # (P,) i32 — post-process STEALABLE bag sizes
+    hungry: jax.Array,       # (P,) bool — no bag items AND no in-progress work
+    pending: jax.Array,      # (P, P) bool — pending[t, v]: t waits on buddy v
+    key: jax.Array,          # PRNG key, already folded with the superstep
+    buddies: jax.Array,      # (P, z) i32 static buddy table
+    params: GLBParams,
+) -> MatchResult:
+    P = sizes.shape[0]
+    z = buddies.shape[1]
+    w = params.w
+    if params.no_steal:  # static-partitioning baseline: nobody ever steals
+        neg = jnp.full((P,), -1, jnp.int32)
+        return MatchResult(src=neg, dst=neg,
+                           via_lifeline=jnp.zeros((P,), bool),
+                           pending=pending)
+    can_give = sizes >= max(params.min_give, 1)
+
+    neg = jnp.full((P,), -1, jnp.int32)
+    init = dict(
+        claimed=~can_give,                  # victims already unusable are "claimed"
+        matched=~hungry,                    # non-hungry places never steal
+        src=neg,
+        dst=neg,
+        via=jnp.zeros((P,), bool),
+    )
+
+    def _claim(state, t, v, found, via_lifeline):
+        """Pair thief t with victim v if `found` (all P-length updates)."""
+        do = found & ~state["matched"][t]
+        v = jnp.clip(v, 0, P - 1)
+        return dict(
+            claimed=state["claimed"].at[v].set(state["claimed"][v] | do),
+            matched=state["matched"].at[t].set(state["matched"][t] | do),
+            src=state["src"].at[t].set(jnp.where(do, v, state["src"][t])),
+            dst=state["dst"].at[v].set(jnp.where(do, t, state["dst"][v])),
+            via=state["via"].at[t].set(jnp.where(do, via_lifeline, state["via"][t])),
+        )
+
+    # ---- pass 1: serve remembered lifeline requests (oldest edge = lowest v)
+    def pass1(t, state):
+        row = pending[t] & ~state["claimed"]
+        v = jnp.argmin(jnp.where(row, jnp.arange(P), P))
+        found = row.any() & ~state["matched"][t]
+        return _claim(state, t, v, found, jnp.bool_(True))
+
+    state = jax.lax.fori_loop(0, P, pass1, init)
+
+    # ---- pass 2: random round — w fresh victims per thief (never self)
+    if P > 1 and w > 0:
+        cand = (jnp.arange(P)[:, None]
+                + 1 + jax.random.randint(key, (P, w), 0, P - 1)) % P
+
+        def pass2(t, state):
+            for i in range(w):  # static unroll, w is small
+                v = cand[t, i]
+                found = ~state["claimed"][v]
+                state = _claim(state, t, v, found, jnp.bool_(False))
+            return state
+
+        state = jax.lax.fori_loop(0, P, pass2, state)
+
+    # ---- pass 3: lifeline round — buddies in dimension order
+    def pass3(t, state):
+        for i in range(z):  # static unroll, z <= log2(P)
+            v = buddies[t, i]
+            found = ~state["claimed"][v]
+            state = _claim(state, t, v, found, jnp.bool_(True))
+        return state
+
+    state = jax.lax.fori_loop(0, P, pass3, state)
+
+    # ---- pending update: unmatched hungry thieves (re-)register their
+    # lifelines; thieves that got work clear their outstanding requests.
+    ll_mask = jnp.asarray(lifeline_mask(P, z))  # static constant
+    unmatched = hungry & ~state["matched"]
+    new_pending = (pending | (ll_mask & unmatched[:, None])) & ~state["matched"][:, None]
+    # A pending edge only makes sense towards a buddy; rows of non-hungry
+    # places were cleared above (matched includes them).
+
+    src = jnp.where(hungry, state["src"], -1)
+    return MatchResult(src=src, dst=state["dst"], via_lifeline=state["via"],
+                       pending=new_pending)

@@ -1,0 +1,61 @@
+"""The GLB user contract — the paper's TaskQueue/TaskBag interface (§2.3).
+
+The paper asks users for sequential pieces of code:
+  process(n)  — compute up to n task items, return whether work remains;
+  split()     — give away part of the bag (None if too small);
+  merge(tb)   — absorb an incoming bag;
+  getResult() — local result;
+  reduce()    — associative+commutative reduction across places;
+plus an optional ``init`` that seeds the root task at place 0.
+
+Here the same contract is a bundle of *pure jnp functions* operating on
+explicit (state, bag) pytrees so GLB can run them under ``vmap`` (simulated
+places) or ``shard_map`` (real devices). ``process`` takes an explicit budget
+and returns partial progress — the paper's "interruptable state machine"
+refinement (§2.6) is the norm here, which bounds steal-response latency by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+
+State = Any
+Bag = Dict[str, Any]
+Packet = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GLBProblem:
+    """A GLB-schedulable problem. All callables are pure and jit-safe.
+
+    init_place(p, P)        -> (state, bag) for place index p (traced i32).
+                               Root-style problems put the root task at p==0;
+                               statically-partitionable problems pre-split.
+    process(state, bag, n)  -> (state, bag, processed:i32). Handles at most n
+                               work units; must be a no-op on an empty bag.
+    split(bag, K)           -> (bag, packet). Packet carries <= K items and
+                               its own count; count==0 means "nothing to give"
+                               (the paper's `split() == null`).
+    merge(bag, packet)      -> bag. Must be a no-op for count==0.
+    result(state)           -> result pytree (reduced across places).
+    reduce_op               — 'sum' | 'max' | 'min' (assoc.+comm., §2.1).
+    capacity                — bag capacity incl. slack for one merge packet.
+    work_in_state(state)    -> i32 count of in-progress, non-stealable work
+                               held in `state` (the paper's §2.6 interruptable
+                               state machine mid-vertex). Counted for hunger
+                               and termination, but not stealable. Optional.
+    """
+
+    name: str
+    item_spec: Dict[str, jax.ShapeDtypeStruct]
+    capacity: int
+    init_place: Callable[[jax.Array, int], Tuple[State, Bag]]
+    process: Callable[[State, Bag, int], Tuple[State, Bag, jax.Array]]
+    split: Callable[[Bag, int], Tuple[Bag, Packet]]
+    merge: Callable[[Bag, Packet], Bag]
+    result: Callable[[State], Any]
+    reduce_op: str = "sum"
+    work_in_state: Callable[[State], jax.Array] | None = None

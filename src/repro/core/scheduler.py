@@ -1,0 +1,151 @@
+"""Global-view GLB superstep scheduler (simulated places).
+
+Runs P *virtual places* on however many real devices exist (typically one):
+every per-place array carries a leading P axis, per-place user code is
+``vmap``-ed, and the balance phase is plain array indexing. This is the
+reference semantics of the distributed executor (``executor.py``) — the two
+are asserted equivalent in tests — and is what the paper-figure benchmarks
+sweep over place counts with.
+
+One superstep (see DESIGN.md §2 for the X10 -> BSP mapping):
+  1. every place runs ``process(n)``           (paper: work between probes)
+  2. bag sizes are exchanged                   (paper: steal requests)
+  3. deterministic matching pairs thieves/victims (random + lifeline rounds)
+  4. victims ``split``, packets routed, thieves ``merge``
+  5. global termination check (sum of sizes == 0)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .lifeline import lifeline_buddies, match_steals
+from .params import GLBParams
+from .problem import GLBProblem
+from .stats import init_stats, update_stats
+
+
+class GLBRun(NamedTuple):
+    result: Any                   # reduced result (the paper's `reduce()`)
+    per_place: Any                # per-place results, leading P axis
+    stats: Dict[str, jax.Array]   # per-place counters, leading P axis
+    supersteps: jax.Array         # i32
+    converged: jax.Array          # bool — False only if max_supersteps hit
+
+
+def _select(cond_p: jax.Array, a: Any, b: Any) -> Any:
+    """Per-place select over pytrees with leading P axis."""
+    def sel(x, y):
+        c = cond_p.reshape(cond_p.shape + (1,) * (x.ndim - 1))
+        return jnp.where(c, x, y)
+    return jax.tree.map(sel, a, b)
+
+
+def reduce_result(per_place: Any, op: str) -> Any:
+    if op == "sum":
+        return jax.tree.map(lambda x: x.sum(axis=0), per_place)
+    if op == "max":
+        return jax.tree.map(lambda x: x.max(axis=0), per_place)
+    if op == "min":
+        return jax.tree.map(lambda x: x.min(axis=0), per_place)
+    raise ValueError(f"unknown reduce op {op!r}")
+
+
+def run_sim(
+    problem: GLBProblem,
+    P: int,
+    params: GLBParams = GLBParams(),
+    seed: int = 0,
+    max_supersteps: Optional[int] = None,
+) -> GLBRun:
+    """Execute `problem` on P simulated places. Fully jit-compiled."""
+    z = params.resolve_z(P)
+    buddies = jnp.asarray(lifeline_buddies(P, z))
+    max_steps = max_supersteps or params.max_supersteps
+
+    vprocess = jax.vmap(problem.process, in_axes=(0, 0, None))
+    vsplit = jax.vmap(problem.split, in_axes=(0, None))
+    vmerge = jax.vmap(problem.merge)
+
+    def _run(key):
+        states, bags = jax.vmap(lambda p: problem.init_place(p, P))(
+            jnp.arange(P, dtype=jnp.int32)
+        )
+        carry = dict(
+            states=states,
+            bags=bags,
+            pending=jnp.zeros((P, P), bool),
+            step=jnp.zeros((), jnp.int32),
+            done=jnp.zeros((), bool),
+            stats=init_stats(P),
+        )
+
+        def cond(c):
+            return (~c["done"]) & (c["step"] < max_steps)
+
+        def body(c):
+            # 1. process
+            states, bags, processed = vprocess(c["states"], c["bags"], params.n)
+            sizes = bags["size"]
+            # In-progress, non-stealable work held in state (paper §2.6's
+            # interruptable state machine) counts for hunger/termination.
+            if problem.work_in_state is not None:
+                pend = jax.vmap(problem.work_in_state)(states).astype(jnp.int32)
+            else:
+                pend = jnp.zeros_like(sizes)
+            hungry = (sizes + pend) == 0
+
+            # 2-3. match thieves to victims (replicated-deterministic)
+            k_step = jax.random.fold_in(key, c["step"])
+            m = match_steals(sizes, hungry, c["pending"], k_step, buddies, params)
+
+            # 4. transfer: victims split, packets routed, thieves merge
+            bags_split, packets = vsplit(bags, params.steal_k)
+            give = m.dst >= 0
+            packets["count"] = jnp.where(give, packets["count"], 0)
+            bags = _select(give, bags_split, bags)
+
+            srcc = jnp.clip(m.src, 0, P - 1)
+            recv = jax.tree.map(lambda x: x[srcc], packets)
+            recv["count"] = jnp.where(m.src >= 0, recv["count"], 0)
+            bags = vmerge(bags, recv)
+
+            # 5. termination: if no work existed post-process, none was
+            # transferred either (victims need size>0), so this is exact.
+            done = (sizes.sum() + pend.sum()) == 0
+
+            stats = update_stats(
+                c["stats"],
+                processed=processed,
+                hungry=hungry,
+                src=m.src,
+                via_lifeline=m.via_lifeline,
+                dst=m.dst,
+                sent=packets["count"],
+                recv=recv["count"],
+                registered=(m.pending & ~c["pending"]).any(axis=1),
+                sizes=bags["size"],
+            )
+            return dict(
+                states=states,
+                bags=bags,
+                pending=m.pending,
+                step=c["step"] + 1,
+                done=done,
+                stats=stats,
+            )
+
+        out = jax.lax.while_loop(cond, body, carry)
+        per_place = jax.vmap(problem.result)(out["states"])
+        result = reduce_result(per_place, problem.reduce_op)
+        return GLBRun(
+            result=result,
+            per_place=per_place,
+            stats=out["stats"],
+            supersteps=out["step"],
+            converged=out["done"],
+        )
+
+    return jax.jit(_run)(jax.random.key(seed))

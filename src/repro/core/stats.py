@@ -1,0 +1,80 @@
+"""GLB logging counters (paper §2.4).
+
+The paper logs, per worker: (1) time spent processing vs distributing work,
+(2) random/lifeline steal requests sent and received, (3) steals perpetrated,
+(4) workload sent/received. In the bulk-synchronous adaptation "time" becomes
+superstep counts; everything else maps 1:1.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FIELDS = (
+    "processed",        # work units processed (paper: tasks computed)
+    "active_steps",     # supersteps in which this place processed > 0 items
+    "idle_steps",       # supersteps in which this place was hungry
+    "steals_random",    # successful steals via the random round (as thief)
+    "steals_lifeline",  # successful steals via a lifeline edge (as thief)
+    "served",           # steals served (as victim, "perpetrated" on us)
+    "items_sent",       # task items shipped out
+    "items_recv",       # task items received
+    "lifeline_regs",    # lifeline registrations (requests "sent")
+    "max_size",         # high-water mark of the bag (capacity audit)
+)
+
+
+def init_stats(P: int) -> Dict[str, jax.Array]:
+    return {f: jnp.zeros((P,), jnp.int32) for f in FIELDS}
+
+
+def update_stats(
+    stats: Dict[str, jax.Array],
+    *,
+    processed: jax.Array,      # (P,) items processed this superstep
+    hungry: jax.Array,         # (P,) bool at match time
+    src: jax.Array,            # (P,) victim index or -1
+    via_lifeline: jax.Array,   # (P,) bool
+    dst: jax.Array,            # (P,) thief index or -1
+    sent: jax.Array,           # (P,) packet items sent
+    recv: jax.Array,           # (P,) packet items received
+    registered: jax.Array,     # (P,) bool — registered lifelines this step
+    sizes: jax.Array,          # (P,) post-transfer bag sizes
+) -> Dict[str, jax.Array]:
+    got = src >= 0
+    s = dict(stats)
+    s["processed"] = stats["processed"] + processed.astype(jnp.int32)
+    s["active_steps"] = stats["active_steps"] + (processed > 0)
+    s["idle_steps"] = stats["idle_steps"] + hungry
+    s["steals_random"] = stats["steals_random"] + (got & ~via_lifeline)
+    s["steals_lifeline"] = stats["steals_lifeline"] + (got & via_lifeline)
+    s["served"] = stats["served"] + (dst >= 0)
+    s["items_sent"] = stats["items_sent"] + sent.astype(jnp.int32)
+    s["items_recv"] = stats["items_recv"] + recv.astype(jnp.int32)
+    s["lifeline_regs"] = stats["lifeline_regs"] + registered
+    s["max_size"] = jnp.maximum(stats["max_size"], sizes.astype(jnp.int32))
+    return s
+
+
+def summarize(stats: Dict[str, np.ndarray], supersteps: int) -> str:
+    """Paper-style log summary across places."""
+    st = {k: np.asarray(v) for k, v in stats.items()}
+    P = st["processed"].shape[0]
+    lines = [f"GLB stats over {P} places, {supersteps} supersteps"]
+    for f in FIELDS:
+        v = st[f]
+        lines.append(
+            f"  {f:<16} total={int(v.sum()):>12}  mean={v.mean():>12.1f}  "
+            f"std={v.std():>10.2f}  max={int(v.max()):>10}"
+        )
+    proc = st["processed"].astype(np.float64)
+    if proc.sum() > 0:
+        # Workload-distribution quality, the paper's Fig. 6/8/10 metric.
+        lines.append(
+            f"  workload imbalance: max/mean={proc.max() / max(proc.mean(), 1e-9):.3f}"
+            f"  std/mean={proc.std() / max(proc.mean(), 1e-9):.3f}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,151 @@
+"""Array-backed TaskBag — the paper's default ``ArrayList``-based bag (§2.3).
+
+A bag is a pytree::
+
+    {"items": {field: (C, *trailing) array, ...}, "size": i32 scalar}
+
+with a *static* capacity ``C``. All operations are pure jnp functions so they
+work identically under ``vmap`` (simulated places on one device) and inside
+``shard_map`` (one bag per TPU device).
+
+The paper's default split "removes half of the elements from the end of the
+ArrayList"; ``split_tail_half`` implements exactly that (capped at the steal
+packet size K). Problem-specific bags (UTS, BC) override split with the
+paper's interval-halving scheme instead (§2.5.2, §2.6.2) — those live in
+``repro.problems``.
+
+Capacity discipline: callers must keep ``size + K <= C`` before a merge; the
+constructors over-allocate a ``K`` slack region so the paper-level capacity is
+honoured. Writes beyond ``size`` are dead space and may hold garbage.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Bag = Dict[str, Any]     # {"items": {...}, "size": i32}
+Packet = Dict[str, Any]  # {"items": {...(K, ...)}, "count": i32}
+
+
+def make_bag(item_spec: Dict[str, jax.ShapeDtypeStruct], capacity: int) -> Bag:
+    """An empty bag with room for `capacity` items (plus internal slack)."""
+    items = {
+        k: jnp.zeros((capacity,) + tuple(s.shape), s.dtype)
+        for k, s in item_spec.items()
+    }
+    return {"items": items, "size": jnp.zeros((), jnp.int32)}
+
+
+def make_packet(item_spec: Dict[str, jax.ShapeDtypeStruct], k: int) -> Packet:
+    items = {
+        key: jnp.zeros((k,) + tuple(s.shape), s.dtype)
+        for key, s in item_spec.items()
+    }
+    return {"items": items, "count": jnp.zeros((), jnp.int32)}
+
+
+def bag_size(bag: Bag) -> jax.Array:
+    return bag["size"]
+
+
+def _update_block(arr: jax.Array, block: jax.Array, start: jax.Array) -> jax.Array:
+    """dynamic_update_slice of `block` rows at row offset `start`."""
+    zeros = (jnp.zeros((), jnp.int32),) * (arr.ndim - 1)
+    return jax.lax.dynamic_update_slice(arr, block.astype(arr.dtype), (start,) + zeros)
+
+
+def push_block(bag: Bag, block: Dict[str, jax.Array], count: jax.Array) -> Bag:
+    """Append `count` valid rows of `block` (leading K axis). Rows beyond
+    `count` are written into dead space and overwritten by later pushes.
+
+    The write is guarded on ``count > 0``: dynamic_update_slice clamps its
+    start offset, so an unguarded no-op push into a nearly-full bag would
+    otherwise overwrite live rows (merges are broadcast to all places with
+    count 0 almost everywhere)."""
+    size = bag["size"]
+    count = count.astype(jnp.int32)
+    items = {}
+    for k, v in bag["items"].items():
+        written = _update_block(v, block[k], size)
+        items[k] = jnp.where(count > 0, written, v)
+    return {"items": items, "size": size + count}
+
+
+def push_one(bag: Bag, item: Dict[str, jax.Array]) -> Bag:
+    block = {k: v[None] for k, v in item.items()}
+    return push_block(bag, block, jnp.int32(1))
+
+
+def peek_tail(bag: Bag) -> Dict[str, jax.Array]:
+    idx = jnp.maximum(bag["size"] - 1, 0)
+    return {k: v[idx] for k, v in bag["items"].items()}
+
+
+def pop_tail(bag: Bag) -> tuple[Bag, Dict[str, jax.Array]]:
+    item = peek_tail(bag)
+    return {"items": bag["items"], "size": jnp.maximum(bag["size"] - 1, 0)}, item
+
+
+def read_front(bag: Bag, k: int) -> Dict[str, jax.Array]:
+    """First (oldest) k rows — static slice."""
+    return {key: v[:k] for key, v in bag["items"].items()}
+
+
+def write_front(bag: Bag, block: Dict[str, jax.Array]) -> Bag:
+    items = {k: _update_block(v, block[k], jnp.int32(0)) for k, v in bag["items"].items()}
+    return {"items": items, "size": bag["size"]}
+
+
+def split_tail_half(bag: Bag, k: int) -> tuple[Bag, Packet]:
+    """Paper's default ArrayList split: remove ceil(half) of the elements from
+    the END of the list (capped at the packet width k) and hand them over."""
+    size = bag["size"]
+    take = jnp.minimum((size + 1) // 2, k)
+    start = jnp.maximum(size - take, 0)
+    zerotails = lambda a: (jnp.zeros((), jnp.int32),) * (a.ndim - 1)
+    pkt_items = {
+        key: jax.lax.dynamic_slice(v, (start,) + zerotails(v), (k,) + v.shape[1:])
+        for key, v in bag["items"].items()
+    }
+    # Rows beyond `take` in the packet are garbage; mask them out so the
+    # packet is self-describing (and zeroed rows compress well on the wire).
+    lane = jnp.arange(k)
+    pkt_items = {
+        key: jnp.where(
+            (lane < take).reshape((k,) + (1,) * (v.ndim - 1)), v, jnp.zeros_like(v)
+        )
+        for key, v in pkt_items.items()
+    }
+    new_bag = {"items": bag["items"], "size": size - take}
+    return new_bag, {"items": pkt_items, "count": take.astype(jnp.int32)}
+
+
+def merge_packet(bag: Bag, packet: Packet) -> Bag:
+    """Paper's default merge: append the incoming items (§2.3)."""
+    return push_block(bag, packet["items"], packet["count"])
+
+
+def compact_block(block: Dict[str, jax.Array], valid: jax.Array) -> tuple[Dict[str, jax.Array], jax.Array]:
+    """Stable-compact valid rows of a (K, ...) block to the front.
+
+    Returns (compacted block, count). Invalid rows are zeroed.
+    """
+    k = valid.shape[0]
+    order = jnp.argsort(~valid, stable=True)  # valid lanes first, stable
+    count = valid.sum().astype(jnp.int32)
+    lane = jnp.arange(k)
+    out = {}
+    for key, v in block.items():
+        g = v[order]
+        mask = (lane < count).reshape((k,) + (1,) * (v.ndim - 1))
+        out[key] = jnp.where(mask, g, jnp.zeros_like(g))
+    return out, count
+
+
+def empty_like_packet(packet: Packet) -> Packet:
+    return {
+        "items": {k: jnp.zeros_like(v) for k, v in packet["items"].items()},
+        "count": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,1 @@
+"""Deterministic, checkpointable synthetic data pipeline."""

@@ -1,0 +1,86 @@
+"""Deterministic, checkpointable synthetic token pipeline.
+
+Production-shaped: the iterator's full state is (seed, step), so a restore
+replays the exact same batches (resume-determinism is tested); batches are
+sharded per DP rank by slicing the global batch. A "document length"
+distribution creates the packing irregularity the GLB balancer cares about.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class DataState:
+    seed: int
+    step: int
+
+    def to_dict(self):
+        return {"seed": self.seed, "step": self.step}
+
+    @staticmethod
+    def from_dict(d):
+        return DataState(int(d["seed"]), int(d["step"]))
+
+
+class SyntheticTokens:
+    """Zipf-ish token stream with geometric document lengths, packed into
+    fixed (B, S) batches with EOS separators. Deterministic in (seed, step).
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 eos: int = 1):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.eos = eos
+        self.state = DataState(seed=seed, step=0)
+
+    def _gen(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        # zipf-flavored unigram stream, clipped to vocab
+        v = self.cfg.vocab
+        z = rng.zipf(1.3, size=n).astype(np.int64)
+        return np.minimum(z + 1, v - 1)
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        st = self.state
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=st.seed, spawn_key=(st.step,))
+        )
+        B, S = self.batch, self.seq
+        toks = self._gen(rng, B * S).reshape(B, S)
+        # sprinkle document boundaries (geometric lengths, mean S/4)
+        for b in range(B):
+            pos = 0
+            while pos < S:
+                ln = int(rng.geometric(4.0 / S)) + 1
+                pos += ln
+                if pos < S:
+                    toks[b, pos] = self.eos
+        self.state = DataState(st.seed, st.step + 1)
+        out: Dict[str, np.ndarray] = {}
+        if self.cfg.n_codebooks:
+            q = np.stack(
+                [(toks * (k + 3)) % self.cfg.vocab
+                 for k in range(self.cfg.n_codebooks)], axis=-1
+            )
+            out["tokens"] = q.astype(np.int32)
+        elif self.cfg.family == "vlm":
+            d = self.cfg.d_model
+            out["embeds"] = rng.standard_normal((B, S, d)).astype(np.float32)
+            pos3 = np.broadcast_to(np.arange(S, dtype=np.int32)[None, :, None],
+                                   (B, S, 3)).copy()
+            out["positions"] = pos3
+            out["labels"] = toks.astype(np.int32)
+        else:
+            out["tokens"] = toks.astype(np.int32)
+        return out
+
+    def shard(self, batch: Dict[str, np.ndarray], rank: int, world: int):
+        per = self.batch // world
+        return {k: v[rank * per:(rank + 1) * per] for k, v in batch.items()}

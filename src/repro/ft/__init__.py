@@ -1,0 +1,1 @@
+"""Fault tolerance: checkpoint/restore (+async), elastic resharding."""

@@ -1,0 +1,134 @@
+"""Checkpointing + elastic restore.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        manifest.json        # step, config name, tree structure, data state
+        arrays/<flat_key>.npy
+
+- save() device_gets the pytree (optionally on a background thread — the
+  async path real clusters use so the TPUs keep stepping).
+- restore() rebuilds the pytree and device_puts with the CALLER's shardings:
+  the mesh at restore time may differ from save time (elastic rescale) —
+  resharding is just a different device_put target.
+- A `keep` window garbage-collects old steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    tree: Any,
+    extra: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+    async_: bool = False,
+):
+    """Write checkpoint; with async_=True the file I/O happens on a
+    background thread after a synchronous device_get snapshot."""
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+
+    def _write():
+        d = os.path.join(ckpt_dir, f"step_{step:09d}")
+        tmp = d + ".tmp"
+        os.makedirs(os.path.join(tmp, "arrays"), exist_ok=True)
+        for k, v in flat.items():
+            np.save(os.path.join(tmp, "arrays", k.replace("/", "__") + ".npy"), v)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.rename(tmp, d)
+        _gc(ckpt_dir, keep)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    return steps[-1] if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: Optional[int] = None,
+    shardings: Any = None,
+):
+    """Load a checkpoint; device_put each leaf with the caller's shardings
+    (None -> default placement). Returns (tree, manifest_extra, step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for k in manifest["keys"]:
+        flat[k] = np.load(
+            os.path.join(d, "arrays", k.replace("/", "__") + ".npy")
+        )
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        tree = _unflatten({
+            k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+            for k, v in _flatten(tree).items()
+        })
+    return tree, manifest.get("extra", {}), step

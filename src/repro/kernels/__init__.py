@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+pure-jnp oracle in ref.py and a dispatching wrapper in ops.py:
+
+  uts_expand.py      — the paper's UTS hot loop: batched node hashing +
+                       geometric child counts (VPU integer mixing)
+  flash_attention.py — causal GQA flash attention (online softmax, VMEM
+                       scratch across the sequential kv grid dim)
+  mamba2_ssd.py      — Mamba2 SSD chunk scan (matmul-form intra-chunk +
+                       carried (N,P) state)
+
+CPU container note: kernels are exercised with interpret=True in tests; the
+models call ops.* which selects pallas on TPU and the oracle elsewhere.
+"""
+from . import ops, ref  # noqa: F401

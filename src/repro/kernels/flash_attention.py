@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention (causal, GQA), VMEM-tiled with BlockSpecs.
+
+Online-softmax blocked attention: grid = (batch, q_heads, q_blocks,
+kv_blocks) with the kv dimension innermost — TPU grids execute sequentially,
+so the running max / denominator / accumulator live in VMEM scratch across
+kv steps and the output tile is written once on the last kv step.
+
+Supports Sq != Skv with decode alignment (query i sits at absolute position
+Skv - Sq + i), which is what the serving path needs (Sq == 1 against a long
+KV cache), and GQA via the kv-head index map (h // group).
+
+Oracle: ref.attention_ref. Validated in interpret mode on CPU; compiled on
+TPU (MXU-aligned tiles: block_q/block_k multiples of 128 when shapes allow).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, sq, skv, block_q, block_k, num_kv):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    i = pl.program_id(2)
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (skv - sq)
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    needed = (not causal) or True  # block-level skip below via pl.when
+
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)           # (Bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (Bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                           # (Bq, Bk)
+        if causal:
+            mask = qpos >= kpos
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                 # (Bq, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))   # (Bq,)
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(qpos >= kpos, p, 0.0)
+        alpha = jnp.exp(m_prev[:, 0] - m_new)               # (Bq,)
+        l_new = alpha * l_prev[:, 0] + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    if causal:
+        # Skip blocks strictly above the diagonal.
+        q_max = i * block_q + block_q - 1 + (skv - sq)
+        k_min = j * block_k
+        pl.when(q_max >= k_min)(_body)
+    else:
+        _body()
+
+    @pl.when(j == num_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, scale: float | None = None,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    num_kv = Skv // bk
+    grid = (B, Hq, Sq // bq, num_kv)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, sq=Sq, skv=Skv,
+        block_q=bq, block_k=bk, num_kv=num_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // group, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        # VMEM scratch carried across the sequential kv grid dimension.
+        scratch_shapes=[
+            _vmem((bq, D), jnp.float32),   # output accumulator
+            _vmem((bq, 1), jnp.float32),   # running max
+            _vmem((bq, 1), jnp.float32),   # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) chunk scan.
+
+The SSD insight: a selective-state-space recurrence
+    h_t = exp(A·dt_t) h_{t-1} + dt_t·x_t ⊗ B_t,    y_t = C_t h_t
+can be evaluated chunk-wise with matmuls (MXU work) plus a tiny inter-chunk
+state carry. For a chunk of length L with inclusive log-decay prefix
+s_t = A·Σ_{τ<=t} dt_τ:
+
+    y_intra = ((C Bᵀ) ∘ M) (dt·x)        M[t,τ] = exp(s_t - s_τ)·[τ<=t]
+    y_inter = exp(s_t) · (C h_in)
+    h_out   = exp(s_L) h_in + Bᵀ diag(exp(s_L - s_t)·dt) x
+
+Grid = (batch, heads, chunks) with chunks innermost (sequential on TPU); the
+(N, P) state lives in VMEM scratch across chunk steps. exp arguments are all
+<= 0 (A < 0), so the chunk math is numerically tame.
+
+Oracle: ref.ssd_ref (sequential lax.scan). Single B/C group (n_groups=1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+            chunk, nchunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (L,)
+    A = a_ref[0].astype(jnp.float32)               # ()
+    Bm = b_ref[0].astype(jnp.float32)              # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)              # (L, N)
+
+    s = A * jnp.cumsum(dt)                         # (L,) inclusive, <= 0
+    dx = dt[:, None] * x                           # (L, P)
+
+    # intra-chunk: ((C B^T) o M) dx
+    g = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tau_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = t_idx >= tau_idx
+    logm = s[:, None] - s[None, :]
+    m = jnp.where(causal, jnp.exp(jnp.minimum(logm, 0.0)), 0.0)
+    y = jax.lax.dot_general(g * m, dx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, P)
+
+    # inter-chunk: exp(s_t) C_t h_in
+    h_in = h_ref[...]                              # (N, P)
+    y += jnp.exp(s)[:, None] * jax.lax.dot_general(
+        Cm, h_in, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # state update: h_out = exp(s_L) h_in + B^T diag(exp(s_L - s)) dx
+    s_l = s[chunk - 1]
+    wts = jnp.exp(s_l - s)[:, None] * dx           # (L, P)
+    h_new = jnp.exp(s_l) * h_in + jax.lax.dot_general(
+        Bm, wts, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    h_ref[...] = h_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nchunks - 1)
+    def _final():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = False):
+    """x (Bt,T,H,P), dt (Bt,T,H), A (H,), B/C (Bt,T,N) -> y, h_final."""
+    Bt, T, H, P = x.shape
+    N = B.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nchunks = T // L
+    grid = (Bt, H, nchunks)
+
+    kernel = functools.partial(_kernel, chunk=L, nchunks=nchunks)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, L, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, h

@@ -1,0 +1,79 @@
+"""Pallas TPU grouped matmul (GMM) for MoE expert compute.
+
+After sort-based dispatch, tokens sit in expert-contiguous rows; each
+expert e multiplies its row slab x[start_e:start_e+n_e] by its own weight
+W[e]. The kernel tiles tokens (Bt) and the output feature dim (Bf); the
+grid walks (token tile, feature tile, expert). A token tile may straddle a
+group boundary, so each expert pass masks the rows belonging to it and
+ACCUMULATES into the output tile — out-tile revisits are sequential on TPU
+(expert is the innermost grid dim).
+
+group_offsets (E+1,) comes in via scalar prefetch (it determines the mask,
+not the data layout). Oracle: ref.gmm_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(offs_ref, x_ref, w_ref, o_ref, *, block_t, n_experts):
+    t = pl.program_id(0)
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    start = offs_ref[e]
+    stop = offs_ref[e + 1]
+    row0 = t * block_t
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_t, 1), 0)
+    mask = (rows >= start) & (rows < stop)              # (Bt, 1)
+
+    @pl.when((stop > row0) & (start < row0 + block_t))
+    def _acc():
+        x = jnp.where(mask, x_ref[...], jnp.zeros_like(x_ref))
+        o_ref[...] += jax.lax.dot_general(
+            x.astype(jnp.float32), w_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_f", "interpret")
+)
+def gmm(x, w, group_sizes, *, block_t: int = 128, block_f: int = 128,
+        interpret: bool = False):
+    """x (T, D) rows sorted by expert; w (E, D, F); group_sizes (E,) i32.
+    Returns (T, F) with out[i] = x[i] @ w[expert_of(i)]."""
+    T, D = x.shape
+    E, _, F = w.shape
+    bt = min(block_t, T)
+    bf = min(block_f, F)
+    assert T % bt == 0 and F % bf == 0, (T, bt, F, bf)
+    offs = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes).astype(jnp.int32)]
+    )
+    grid = (T // bt, F // bf, E)
+    kernel = functools.partial(_kernel, block_t=bt, n_experts=E)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # index maps take the scalar-prefetch ref as a trailing arg
+                pl.BlockSpec((bt, D), lambda t, f, e, offs: (t, 0)),
+                pl.BlockSpec((1, D, bf), lambda t, f, e, offs: (e, 0, f)),
+            ],
+            out_specs=pl.BlockSpec((bt, bf), lambda t, f, e, offs: (t, f)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, F), x.dtype),
+        interpret=interpret,
+    )(offs, x, w)

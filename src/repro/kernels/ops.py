@@ -1,0 +1,64 @@
+"""Dispatch layer: jit'd public entry points that pick the Pallas kernel on
+TPU and the pure-jnp oracle elsewhere (this container is CPU-only; kernels
+are validated in interpret mode by the test suite, the models call through
+here so a TPU deployment gets the kernels with zero code change).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention
+from .mamba2_ssd import ssd_chunked
+from .moe_gmm import gmm as gmm_pallas
+from .uts_expand import uts_expand
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, scale=None, impl: str = "auto",
+              block_q: int = 128, block_k: int = 128):
+    """impl: auto | pallas | pallas_interpret | ref | chunked"""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    if impl == "chunked":
+        return ref.attention_chunked(q, k, v, causal=causal, scale=scale,
+                                     block_q=block_q if block_q > 128 else 512)
+    return flash_attention(
+        q, k, v, causal=causal, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 64, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.ssd_ref(x, dt, A, B, C)
+    if impl == "chunked":
+        return ref.ssd_chunked_ref(x, dt, A, B, C, chunk=max(chunk, 128))
+    return ssd_chunked(x, dt, A, B, C, chunk=chunk,
+                       interpret=(impl == "pallas_interpret"))
+
+
+def gmm(x, w, group_sizes, *, impl: str = "auto", block_t=128, block_f=128):
+    """Grouped matmul for sort-dispatched MoE expert compute."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.gmm_ref(x, w, group_sizes)
+    return gmm_pallas(x, w, group_sizes, block_t=block_t, block_f=block_f,
+                      interpret=(impl == "pallas_interpret"))
+
+
+def expand_uts(d0, d1, base, thresholds, *, width=64, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.uts_expand_ref(d0, d1, base, thresholds, width)
+    return uts_expand(d0, d1, base, thresholds, width=width,
+                      interpret=(impl == "pallas_interpret"))

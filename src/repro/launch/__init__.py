@@ -1,0 +1,2 @@
+"""Launchers: production meshes, multi-pod dry-run, train/serve drivers.
+NOTE: do NOT import dryrun from here — it sets XLA_FLAGS at import time."""

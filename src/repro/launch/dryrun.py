@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init, and the production meshes below need 512 placeholder devices.
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture x input-shape) cell — plus the paper's own GLB
+workloads (UTS-G, BC-G) — this lowers + compiles the step function on the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, records
+memory_analysis / cost_analysis / collective bytes, and derives the
+roofline terms (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --arch uts_glb --shape glb
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis import roofline as rl
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config, input_specs
+from repro.dist.sharding import (
+    batch_axes, cache_axes, opt_axes, param_axes, tree_shardings,
+)
+from repro.launch.mesh import make_glb_mesh, make_production_mesh
+from repro.models import init_lm, make_cache
+from repro.models.config import ShapeConfig
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.trainer import make_decode_step, make_prefill_step, make_train_step
+
+GLB_CELLS = ("uts_glb", "bc_glb")
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+MOE_IMPL = os.environ.get("REPRO_MOE_IMPL", "auto")  # auto|global|ep
+MICROBATCH = int(os.environ.get("REPRO_MICROBATCH", "1"))  # train cells
+REMAT = os.environ.get("REPRO_REMAT", "")  # ''=arch default | none|dots|full
+
+
+def _cell_cfg(cfg, shape):
+    """Per-cell impl overrides: long sequences compile the chunked (flash-
+    style) attention / chunk-matmul SSD so the deployable program's memory
+    is bounded; decode uses the masked full-cache path (no inner loops).
+    REPRO_MOE_IMPL=global reproduces the §Perf baseline dispatch."""
+    impl = "chunked" if shape.kind in ("train", "prefill") else "ref"
+    kw = dict(attn_impl=impl, moe_impl=MOE_IMPL)
+    if REMAT:
+        kw["remat"] = REMAT
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_lm_cell(arch: str, shape_name: str, multi_pod: bool,
+                  n_layers: int = 0, scan: bool = True):
+    cfg = _cell_cfg(get_config(arch), SHAPES[shape_name])
+    if n_layers:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False)
+    if not scan:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    pshapes = jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
+    paxes = param_axes(cfg)
+    pshard = tree_shardings(paxes, pshapes, mesh)
+    baxes = batch_axes(cfg, shape.kind)
+    batch = input_specs(cfg, shape)
+    if shape.kind == "train":
+        oshapes = jax.eval_shape(lambda: adamw_init(pshapes))
+        oshard = tree_shardings(opt_axes(paxes), oshapes, mesh)
+        bshard = tree_shardings(baxes, batch, mesh)
+        step = make_train_step(cfg, OptConfig(), microbatches=MICROBATCH)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(pshapes, oshapes, batch)
+    elif shape.kind == "prefill":
+        bshard = tree_shardings(baxes, batch, mesh)
+        step = make_prefill_step(cfg, max_seq=shape.seq_len)
+        cshapes = jax.eval_shape(
+            lambda: make_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        cshard = tree_shardings(cache_axes(cfg), cshapes, mesh)
+        jitted = jax.jit(
+            step, in_shardings=(pshard, bshard),
+            out_shardings=(None, cshard),
+        )
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(pshapes, batch)
+    else:  # decode
+        bshard = tree_shardings(baxes, batch, mesh)
+        step = make_decode_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, bshard["tokens"], bshard["cache"],
+                          bshard["cache_len"]),
+            out_shardings=(None, bshard["cache"]),
+            donate_argnums=(2,),
+        )
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(
+                pshapes, batch["tokens"], batch["cache"], batch["cache_len"]
+            )
+    return lowered, mesh, cfg, shape
+
+
+def lower_glb_cell(which: str, multi_pod: bool):
+    from repro.core import GLBParams, lower_shardmap
+    from repro.problems.bc import bc_problem
+    from repro.problems.rmat import rmat_graph
+    from repro.problems.uts import uts_problem
+
+    mesh = make_glb_mesh(multi_pod=multi_pod)
+    routing = os.environ.get("REPRO_GLB_ROUTING", "dense")
+    params = GLBParams(
+        n=256,
+        w=int(os.environ.get("REPRO_GLB_W", "2")),
+        steal_k=64,
+        steal_k_random=int(os.environ.get("REPRO_GLB_KRAND", "0")),
+        max_supersteps=100_000,
+    )
+    if which == "uts_glb":
+        prob = uts_problem(b0=4.0, depth=16, seed=19, capacity=8192)
+    else:
+        adj, _ = rmat_graph(scale=10, seed=7)   # N=1024, replicated graph
+        prob = bc_problem(adj, capacity=2048)
+    lowered = lower_shardmap(prob, mesh, params, axis="place",
+                             routing=routing)
+    shape = ShapeConfig(which, 0, mesh.shape["place"], "glb")
+    return lowered, mesh, None, shape
+
+
+# ------------------------------------------------------- cost extraction
+def _cost_of(lowered):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def _lin(c1, c2, n1, n2, n):
+    """Linear extrapolation of per-device cost dicts in layer count."""
+    per = {
+        "flops": (c2["flops"] - c1["flops"]) / (n2 - n1),
+        "bytes": (c2["bytes"] - c1["bytes"]) / (n2 - n1),
+        "coll": (c2["coll"].get("total", 0) - c1["coll"].get("total", 0))
+        / (n2 - n1),
+    }
+    return {
+        "flops": c1["flops"] + per["flops"] * (n - n1),
+        "bytes": c1["bytes"] + per["bytes"] * (n - n1),
+        "coll_total": c1["coll"].get("total", 0) + per["coll"] * (n - n1),
+    }
+
+
+def loop_corrections(cfg, shape, chips: int):
+    """Analytic per-device (flops, bytes) for compute inside intra-layer
+    loops (chunked attention q-block map; chunked SSD scan), which XLA's
+    cost_analysis counts only once. Returns the MISSING portion
+    (true * (1 - 1/trips)), global/chips. See EXPERIMENTS.md §Method."""
+    if shape.kind == "decode":
+        return 0.0, 0.0, "none (no intra-layer loops in decode)"
+    B, S = shape.global_batch, shape.seq_len
+    factor = 4.0 if shape.kind == "train" else 1.0  # fwd+2bwd+remat-refwd
+    flops = bytes_ = 0.0
+    notes = []
+    if cfg.n_heads:
+        bq = int(os.environ.get("REPRO_ATTN_BLOCK", "512"))
+        nblk = max(S // bq, 1)
+        attn = 4.0 * B * S * S * cfg.n_heads * cfg.hd * 0.5  # causal
+        kvbytes = nblk * S * cfg.n_kv_heads * cfg.hd * 2 * 2  # re-read k,v
+        napps = (cfg.n_layers // cfg.attn_every
+                 if cfg.family == "hybrid" else cfg.n_layers)
+        miss = (1 - 1.0 / nblk)
+        flops += attn * napps * factor * miss
+        bytes_ += kvbytes * B * napps * factor * miss
+        notes.append(f"attn x{napps} layers, {nblk} q-blocks")
+    if cfg.family in ("ssm", "hybrid"):
+        L = 256
+        nck = max(S // L, 1)
+        H, N, Pd = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+        per_chunk = 2.0 * L * L * (N + H * Pd) + 4.0 * L * H * N * Pd
+        ssd = per_chunk * nck * B * cfg.n_layers
+        miss = (1 - 1.0 / nck)
+        flops += ssd * factor * miss
+        notes.append(f"ssd x{cfg.n_layers} layers, {nck} chunks")
+    return flops / chips, bytes_ / chips, "; ".join(notes) or "none"
+
+
+def analyze_cost(arch: str, shape_name: str, chips: int):
+    """Per-layer cost deltas from reduced-depth UNROLLED compiles,
+    extrapolated to the full depth (exact for homogeneous stacks), plus
+    analytic corrections for intra-layer loops."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if cfg.family == "hybrid":
+        p = cfg.attn_every
+        l6, _, _, _ = lower_lm_cell(arch, shape_name, False, n_layers=p)
+        l7, _, _, _ = lower_lm_cell(arch, shape_name, False, n_layers=p + 1)
+        l12, _, _, _ = lower_lm_cell(arch, shape_name, False, n_layers=2 * p)
+        c6, c7, c12 = _cost_of(l6), _cost_of(l7), _cost_of(l12)
+        napps = cfg.n_layers // p
+        extra = cfg.n_layers - p - (napps - 1) * p
+        agg = {}
+        for key in ("flops", "bytes"):
+            agg[key] = (c6[key] + (napps - 1) * (c12[key] - c6[key])
+                        + extra * (c7[key] - c6[key]))
+        coll = (c6["coll"].get("total", 0)
+                + (napps - 1) * (c12["coll"].get("total", 0)
+                                 - c6["coll"].get("total", 0))
+                + extra * (c7["coll"].get("total", 0)
+                           - c6["coll"].get("total", 0)))
+        out = {"flops": agg["flops"], "bytes": agg["bytes"],
+               "coll_total": coll}
+    else:
+        l1, _, _, _ = lower_lm_cell(arch, shape_name, False, n_layers=1)
+        l2, _, _, _ = lower_lm_cell(arch, shape_name, False, n_layers=2)
+        c1, c2 = _cost_of(l1), _cost_of(l2)
+        out = _lin(c1, c2, 1, 2, cfg.n_layers)
+    df, db, note = loop_corrections(cfg, shape, chips)
+    out["flops_corrected"] = out["flops"] + df
+    out["bytes_corrected"] = out["bytes"] + db
+    out["correction_note"] = note
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str):
+    t0 = time.time()
+    label = f"{arch}/{shape_name}/{'multipod' if multi_pod else 'pod'}"
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod}
+    try:
+        if arch in GLB_CELLS:
+            lowered, mesh, cfg, shape = lower_glb_cell(arch, multi_pod)
+        else:
+            cfg0 = get_config(arch)
+            ok, why = cell_applicable(cfg0, SHAPES[shape_name])
+            if not ok:
+                rec.update(status="skipped", reason=why)
+                return _save(rec, out_dir, label)
+            lowered, mesh, cfg, shape = lower_lm_cell(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        chips = int(np.prod(list(mesh.shape.values())))
+
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                if hasattr(ma, f):
+                    mem[f] = int(getattr(ma, f))
+        except Exception as e:  # noqa: BLE001
+            mem["error"] = repr(e)
+
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        if arch in GLB_CELLS:
+            mflops = 0.0
+            roof = rl.build(compiled, coll, chips, 0.0)
+        else:
+            mflops = rl.model_flops(cfg, shape)
+            if not multi_pod:
+                # layer-extrapolated, loop-corrected cost (the scanned
+                # compile undercounts while-loop bodies); raw kept alongside
+                cx = analyze_cost(arch, shape_name, chips)
+                rec["cost_extrapolated"] = {
+                    k: (round(v, 1) if isinstance(v, float) else v)
+                    for k, v in cx.items()
+                }
+                roof = rl.Roofline(
+                    flops=cx["flops_corrected"],
+                    bytes_accessed=cx["bytes_corrected"],
+                    collective={"total": cx["coll_total"]},
+                    chips=chips,
+                    model_flops=mflops,
+                ).finalize()
+            else:
+                roof = rl.build(compiled, coll, chips, mflops)
+        rec.update(
+            status="ok",
+            chips=chips,
+            mesh={k: int(v) for k, v in mesh.shape.items()},
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory_analysis=mem,
+            collective_bytes=coll,
+            cost={
+                "flops_per_dev": roof.flops,
+                "bytes_per_dev": roof.bytes_accessed,
+            },
+            model_flops=mflops,
+            roofline=roof.row(),
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=repr(e),
+                   trace=traceback.format_exc()[-4000:])
+    return _save(rec, out_dir, label)
+
+
+def _save(rec, out_dir, label):
+    os.makedirs(out_dir, exist_ok=True)
+    fname = label.replace("/", "__") + ".json"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec.get("status")
+    extra = ""
+    if status == "ok":
+        extra = (f" chips={rec['chips']} compile={rec['compile_s']}s "
+                 f"bottleneck={rec['roofline']['bottleneck']}")
+    elif status == "error":
+        extra = " " + rec.get("error", "")[:120]
+    print(f"[dryrun] {label}: {status}{extra}", flush=True)
+    return rec
+
+
+def all_cells():
+    cells = []
+    for arch in sorted(ARCHS):
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            cells.append((arch, shape))
+    cells += [(g, "glb") for g in GLB_CELLS]
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    if args.all:
+        for arch, shape in all_cells():
+            for mp in meshes:
+                run_cell(arch, shape, mp, args.out)
+    else:
+        assert args.arch, "--arch required without --all"
+        for mp in meshes:
+            run_cell(args.arch, args.shape, mp, args.out)
+
+
+if __name__ == "__main__":
+    main()

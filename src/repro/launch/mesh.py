@@ -1,0 +1,28 @@
+"""Production mesh builders. Functions (not module constants) so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods x 256
+    chips with a leading `pod` axis (DP across pods over DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_glb_mesh(*, multi_pod: bool = False):
+    """1-D place mesh for the paper's own GLB workloads (one place per
+    chip): 256 places single-pod, 512 multi-pod."""
+    n = 512 if multi_pod else 256
+    return jax.make_mesh((n,), ("place",), axis_types=(AxisType.Auto,))
+
+
+def make_host_mesh(n: int = 1, axis: str = "place"):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = min(n, len(jax.devices()))
+    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))

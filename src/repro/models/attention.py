@@ -1,0 +1,126 @@
+"""GQA attention with RoPE/M-RoPE, optional QKV bias, prefill/decode caches.
+
+Prefill and train use the flash kernel on TPU (chunked-jnp oracle
+elsewhere); decode attends one token against a (possibly sequence-sharded)
+KV cache with explicit length masking.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import attention_ref
+
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, dense_init
+
+
+def attn_init(key, cfg: ModelConfig):
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * hd)),
+        "wk": dense_init(ks[1], (D, Hkv * hd)),
+        "wv": dense_init(ks[2], (D, Hkv * hd)),
+        "wo": dense_init(ks[3], (Hq * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * hd,), jnp.float32)
+    return p
+
+
+def _rope(cfg: ModelConfig, x, positions):
+    if cfg.mrope:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _masked_decode_attention(q, k, v, kv_len):
+    """One-token attention against a padded cache, mask = kpos < kv_len.
+    q (B,1,Hq,hd); k,v (B,S,Hkv,hd); kv_len (B,) i32. f32 softmax."""
+    B, S, Hkv, hd = k.shape
+    Hq = q.shape[2]
+    group = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, hd)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bgqd,bsgd->bgqs", qf, kf) * scale        # (B,Hkv,grp,S)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqs,bsgd->bgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+def attn_fwd(
+    p,
+    x,                       # (B, S, D)
+    positions,               # (B, S) or (B, S, 3) for mrope
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,   # {"k","v"}: (B, S_max, Hkv, hd)
+    cache_len=None,          # i32 scalar: valid entries in cache
+    mode: str = "train",     # train | prefill | decode
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    from repro.dist.sharding import shard_act
+
+    q = shard_act(q.reshape(B, S, Hq, hd), "batch", "seq", "heads", "none")
+    k = shard_act(k.reshape(B, S, Hkv, hd), "batch", "seq", "heads", "none")
+    v = shard_act(v.reshape(B, S, Hkv, hd), "batch", "seq", "heads", "none")
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        # cache_len: scalar (whole-batch decode) or (B,) per-slot lengths
+        # with -1 marking inactive serving slots (writes dropped, state
+        # untouched).
+        lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+        S_max = cache["k"].shape[1]
+        widx = jnp.where(lens >= 0, lens, S_max)  # OOB => dropped
+        brow = jnp.arange(B)
+        ck = cache["k"].at[brow, widx].set(
+            k[:, 0].astype(cache["k"].dtype), mode="drop"
+        )
+        cv = cache["v"].at[brow, widx].set(
+            v[:, 0].astype(cache["v"].dtype), mode="drop"
+        )
+        o = _masked_decode_attention(q, ck.astype(dt), cv.astype(dt),
+                                     jnp.maximum(lens, 0) + 1)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        import os
+
+        o = ops.attention(
+            q, k, v, causal=True, impl=cfg.attn_impl,
+            block_q=int(os.environ.get("REPRO_ATTN_BLOCK", "512")),
+        )
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            # Write the prompt's k/v into the (larger) cache at cache_len
+            # (chunk 0 in practice); prompt length S <= cache size.
+            off = cache_len if cache_len is not None else jnp.int32(0)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, off, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, off, 0, 0)
+            )
+            new_cache = {"k": ck, "v": cv}
+    y = o.reshape(B, S, Hq * hd) @ p["wo"].astype(dt)
+    return y, new_cache

@@ -1,0 +1,123 @@
+"""GLB-MoE: the paper's lifeline load-balancing applied to expert parallelism.
+
+MoE routing load is irregular and unpredictable — the same problem the paper
+solves for task bags. Here the "task items" are expert shards: each EP rank
+owns E/R expert slots; the observed per-expert token counts (returned by
+``moe_fwd`` every step) are the workload signal.
+
+Between steps (infrequent, host-side) we run the SAME deterministic matching
+as the task scheduler (`core.lifeline.match_steals`) on per-rank loads:
+underloaded ranks are "hungry thieves", overloaded ranks are victims, and a
+matched steal swaps the victim's hottest expert with the thief's coldest
+expert (a swap keeps slot counts static, which keeps shapes/shardings
+static). Logical-expert -> physical-slot indirection (`perm`) makes the swap
+a pure weight permutation: the math is bit-identical, only placement moves.
+
+This is DeepSeek-EPLB-style expert placement balancing, derived from the
+paper's observe-imbalance -> steal loop; see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import GLBParams, lifeline_buddies, match_steals
+
+
+class RebalanceResult(NamedTuple):
+    perm: np.ndarray          # (E,) logical expert -> physical slot
+    loads_before: np.ndarray  # (R,)
+    loads_after: np.ndarray   # (R,)
+    swaps: list               # [(rank_victim, rank_thief, slot_a, slot_b)]
+
+
+def _rank_loads(counts, perm, n_ranks):
+    E = counts.shape[0]
+    per = E // n_ranks
+    slot_load = np.zeros(E)
+    slot_load[perm] = counts          # load of the slot hosting each expert
+    return slot_load.reshape(n_ranks, per).sum(axis=1), slot_load
+
+
+def glb_expert_rebalance(
+    counts,                    # (E,) tokens routed to each *logical* expert
+    perm,                      # (E,) current logical->slot map
+    n_ranks: int,
+    rounds: int = 8,
+    hunger: float = 0.9,       # hungry if load < hunger * mean
+    seed: int = 0,
+) -> RebalanceResult:
+    counts = np.asarray(counts, np.float64)
+    perm = np.asarray(perm, np.int64).copy()
+    E = counts.shape[0]
+    assert E % n_ranks == 0
+    per = E // n_ranks
+    params = GLBParams(w=2)
+    z = params.resolve_z(n_ranks)
+    buddies = jnp.asarray(lifeline_buddies(n_ranks, z))
+    pending = jnp.zeros((n_ranks, n_ranks), bool)
+    loads0, _ = _rank_loads(counts, perm, n_ranks)
+    swaps = []
+
+    for r in range(rounds):
+        loads, slot_load = _rank_loads(counts, perm, n_ranks)
+        mean = loads.mean()
+        hungry = loads < hunger * mean
+        if not hungry.any():
+            break
+        # surplus (integerized) is the "bag size": only above-mean ranks give
+        sizes = np.maximum(loads - mean, 0).astype(np.int32)
+        m = match_steals(
+            jnp.asarray(sizes), jnp.asarray(hungry), pending,
+            jax.random.fold_in(jax.random.key(seed), r), buddies, params,
+        )
+        pending = m.pending
+        src = np.asarray(m.src)
+        did = False
+        for thief in range(n_ranks):
+            victim = int(src[thief])
+            if victim < 0:
+                continue
+            # swap victim's hottest expert with thief's coldest
+            v_slots = np.arange(victim * per, (victim + 1) * per)
+            t_slots = np.arange(thief * per, (thief + 1) * per)
+            hot = v_slots[np.argmax(slot_load[v_slots])]
+            cold = t_slots[np.argmin(slot_load[t_slots])]
+            gain = slot_load[hot] - slot_load[cold]
+            if gain <= 0:
+                continue
+            # apply only if it improves the pairwise imbalance
+            if loads[victim] - loads[thief] > gain * 0.5:
+                e_hot = int(np.nonzero(perm == hot)[0][0])
+                e_cold = int(np.nonzero(perm == cold)[0][0])
+                perm[e_hot], perm[e_cold] = cold, hot
+                slot_load[hot], slot_load[cold] = slot_load[cold], slot_load[hot]
+                loads, _ = _rank_loads(counts, perm, n_ranks)
+                swaps.append((victim, thief, int(hot), int(cold)))
+                did = True
+        if not did and not bool(np.asarray(m.pending).any()):
+            break
+
+    loads1, _ = _rank_loads(counts, perm, n_ranks)
+    return RebalanceResult(perm=perm, loads_before=loads0, loads_after=loads1,
+                           swaps=swaps)
+
+
+def permute_expert_params(moe_params: dict, perm_old, perm_new) -> dict:
+    """Physically move expert weights so logical expert e sits at slot
+    perm_new[e]. Pure gather on the leading expert axis (cross-rank
+    collective when EP-sharded; runs rarely). Router stays logical."""
+    perm_old = np.asarray(perm_old)
+    perm_new = np.asarray(perm_new)
+    E = perm_old.shape[0]
+    # w_new[perm_new[e]] = w_old[perm_old[e]]  =>  gather index per new slot
+    gather = np.empty(E, np.int64)
+    gather[perm_new] = perm_old
+    gidx = jnp.asarray(gather)
+    out = dict(moe_params)
+    for k in ("wg", "wi", "wo"):
+        out[k] = moe_params[k][gidx]
+    return out

@@ -1,0 +1,84 @@
+"""Shared neural building blocks (pure jnp, params are plain dict pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis: int = 0):
+    """Truncated-normal fan-in init, stored float32 (master weights)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis])
+    )
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std)
+
+
+def embed_init(key, shape):
+    return jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * 0.02
+
+
+def rmsnorm(x, scale, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) absolute int positions."""
+    B, S, H, D = x.shape
+    freqs = jnp.asarray(rope_freqs(D, theta), jnp.float32)      # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections):
+    """Qwen2-VL multimodal RoPE: positions (B, S, 3) = (temporal, h, w);
+    the D/2 frequency lanes are split into `sections` (sum = D/2), each
+    rotated by its own position stream."""
+    B, S, H, D = x.shape
+    assert sum(sections) == D // 2, (sections, D)
+    freqs = jnp.asarray(rope_freqs(D, theta), jnp.float32)      # (D/2,)
+    # pick the position stream per frequency lane
+    sec_id = np.concatenate(
+        [np.full(s, i) for i, s in enumerate(sections)]
+    )                                                            # (D/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                           # (B, S, 3)
+        jnp.asarray(sec_id, jnp.int32)[None, None, :].repeat(S, 1).repeat(B, 0),
+        axis=-1,
+    )                                                            # (B, S, D/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, (d_model, d_ff)),
+        "wi": dense_init(k2, (d_model, d_ff)),
+        "wo": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp_fwd(p, x, dtype):
+    g = jax.nn.silu(x @ p["wg"].astype(dtype))
+    h = x @ p["wi"].astype(dtype)
+    return (g * h) @ p["wo"].astype(dtype)

@@ -1,0 +1,75 @@
+"""Task-level entry points: training loss, prefill, decode."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .transformer import forward, make_cache
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _xent(logits, targets, vocab: int):
+    """Stable CE on the unpadded vocab slice; logits (..., Vp) f32 math."""
+    lg = logits[..., :vocab].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def train_loss(params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """batch: {"tokens": (B,S[,K])} or vlm {"embeds","positions","labels"}."""
+    if cfg.family == "vlm":
+        logits, _, aux = forward(
+            params, cfg, embeds=batch["embeds"],
+            positions=batch.get("positions"), mode="train",
+        )
+        targets = batch["labels"][:, 1:]
+        per_tok = _xent(logits[:, :-1], targets, cfg.vocab)
+    elif cfg.n_codebooks:
+        tokens = batch["tokens"]                      # (B,S,K)
+        logits, _, aux = forward(params, cfg, tokens=tokens, mode="train")
+        per_tok = _xent(logits[:, :-1], tokens[:, 1:], cfg.vocab).mean(-1)
+    else:
+        tokens = batch["tokens"]                      # (B,S)
+        logits, _, aux = forward(params, cfg, tokens=tokens, mode="train")
+        per_tok = _xent(logits[:, :-1], tokens[:, 1:], cfg.vocab)
+    loss = per_tok.mean()
+    metrics = {"ce_loss": loss}
+    if cfg.family == "moe":
+        aux_l = aux["aux_loss"] / cfg.n_layers
+        loss = loss + AUX_LOSS_WEIGHT * aux_l
+        metrics["aux_loss"] = aux_l
+        metrics["expert_counts"] = aux["expert_counts"]
+        metrics["dropped_frac"] = aux["dropped"] / (
+            jnp.float32(per_tok.size) * cfg.top_k * cfg.n_layers
+        )
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], max_seq: int):
+    """Fill a fresh cache of size max_seq; prompt must be padded to max_seq.
+    Returns (logits_last, cache)."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    B = (tokens if tokens is not None else embeds).shape[0]
+    cache = make_cache(cfg, B, max_seq)
+    logits, cache, _ = forward(
+        params, cfg, tokens=tokens, embeds=embeds,
+        positions=batch.get("positions"), cache=cache, cache_len=jnp.int32(0),
+        mode="prefill",
+    )
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_len):
+    """One token per sequence: tokens (B,1[,K]). Returns (logits, cache)."""
+    logits, cache, _ = forward(
+        params, cfg, tokens=tokens, cache=cache, cache_len=cache_len,
+        mode="decode",
+    )
+    return logits, cache

@@ -1,0 +1,137 @@
+"""Mamba2 (SSD) block: per-component projections [z | x | B | C | dt],
+causal depthwise conv over x/B/C, selective state-space scan
+(kernels.ops.ssd), gated RMSNorm, out_proj. Decode carries (conv_state,
+ssm_state) instead of a KV cache — O(1) per token, which is why the
+ssm/hybrid archs own long_500k.
+
+Projections (and convs) are SEPARATE per component rather than one fused
+in_proj: the fused layout's output (2*di + 2*ns + nh channels) is not
+divisible by the TP mesh axis and its split boundaries cut across shards,
+which made GSPMD emit a collective-permute per slice (≈1.3 GB/layer on
+mamba2-130m train_4k — EXPERIMENTS §Perf S1). Per-component tensors shard
+cleanly (x,z: d_inner % 16 == 0; B,C,dt replicated: tiny) — same math,
+identical parameter count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+
+def mamba_init(key, cfg: ModelConfig):
+    D, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "wz": dense_init(ks[0], (D, di)),
+        "wx": dense_init(ks[1], (D, di)),
+        "wB": dense_init(ks[2], (D, ns)),
+        "wC": dense_init(ks[3], (D, ns)),
+        "wdt": dense_init(ks[4], (D, nh)),
+        "conv_x": dense_init(ks[5], (cfg.ssm_conv, di)) * 0.5,
+        "conv_B": dense_init(ks[6], (cfg.ssm_conv, ns)) * 0.5,
+        "conv_C": dense_init(ks[7], (cfg.ssm_conv, ns)) * 0.5,
+        "A_log": jnp.zeros((nh,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(ks[8], (di, D)),
+    }
+
+
+def _causal_conv(xc, w, conv_state=None):
+    """Depthwise causal conv along seq. xc (B,S,C); w (K,C).
+    conv_state: (B, K-1, C) trailing inputs from the previous step."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(xc[:, : K - 1])
+    else:
+        pad = conv_state.astype(xc.dtype)
+    full = jnp.concatenate([pad, xc], axis=1)          # (B, S+K-1, C)
+    out = sum(
+        full[:, i : i + xc.shape[1]] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = full[:, -(K - 1):]                      # (B, K-1, C)
+    return jax.nn.silu(out), new_state
+
+
+CONV_KEYS = ("conv_x", "conv_B", "conv_C")
+
+
+def mamba_fwd(
+    p,
+    x,                      # (B, S, D)
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,   # {conv_x/conv_B/conv_C: (B,K-1,*),
+                                    #  ssm: (B,H,N,P)}
+    mode: str = "train",
+    active=None,            # (B,) bool — serving slots whose state may move
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = x.dtype
+
+    z = x @ p["wz"].astype(dt_)
+    xi = x @ p["wx"].astype(dt_)
+    Bm = x @ p["wB"].astype(dt_)
+    Cm = x @ p["wC"].astype(dt_)
+    dt = x @ p["wdt"].astype(dt_)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                     # (nh,)
+
+    states = {k: (cache.get(k) if cache else None) for k in CONV_KEYS}
+    xi, new_cx = _causal_conv(xi, p["conv_x"].astype(dt_), states["conv_x"])
+    Bm, new_cb = _causal_conv(Bm, p["conv_B"].astype(dt_), states["conv_B"])
+    Cm, new_cc = _causal_conv(Cm, p["conv_C"].astype(dt_), states["conv_C"])
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    xh = xi.reshape(B, S, nh, hp)
+    if mode == "decode":
+        # single-step recurrence on the carried state; inactive serving
+        # slots (active=False) keep their state untouched
+        h0 = cache["ssm"].astype(jnp.float32)           # (B, nh, ns, hp)
+        a = jnp.exp(A[None, :] * dt[:, 0])              # (B, nh)
+        dx = dt[:, 0, :, None] * xh[:, 0].astype(jnp.float32)
+        upd = Bm[:, 0, None, :, None] * dx[:, :, None, :]
+        h = h0 * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], h)[:, None]  # (B,1,nh,hp)
+        new_ssm = h
+        if active is not None:
+            act = active.reshape(B, 1, 1, 1)
+            new_ssm = jnp.where(act, new_ssm, h0)
+            a3 = active.reshape(B, 1, 1)
+            olds = {
+                k: (states[k] if states[k] is not None else z_)
+                for k, z_ in (("conv_x", jnp.zeros_like(new_cx)),
+                              ("conv_B", jnp.zeros_like(new_cb)),
+                              ("conv_C", jnp.zeros_like(new_cc)))
+            }
+            new_cx = jnp.where(a3, new_cx, olds["conv_x"].astype(new_cx.dtype))
+            new_cb = jnp.where(a3, new_cb, olds["conv_B"].astype(new_cb.dtype))
+            new_cc = jnp.where(a3, new_cc, olds["conv_C"].astype(new_cc.dtype))
+    else:
+        y, new_ssm = ops.ssd(xh, dt, A, Bm, Cm, impl=cfg.attn_impl
+                             if cfg.attn_impl != "auto" else "auto")
+    y = y.astype(dt_) + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2): norm(y) * silu(z)
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        ref_dt = (cache["conv_x"].dtype if cache else jnp.bfloat16)
+        new_cache = {
+            "conv_x": new_cx.astype(ref_dt),
+            "conv_B": new_cb.astype(ref_dt),
+            "conv_C": new_cc.astype(ref_dt),
+            "ssm": (new_ssm if cache is None
+                    else new_ssm.astype(cache["ssm"].dtype)),
+        }
+    return out, new_cache

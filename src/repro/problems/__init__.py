@@ -1,0 +1,11 @@
+"""The paper's workloads, expressed against the GLB user contract (§2.3):
+
+  fib.py   — the pedagogical appendix example (default ArrayList-style bag)
+  uts.py   — Unbalanced Tree Search (§2.5): geometric tree over a splittable
+             hash RNG; interval-splitting TaskBag; + pure-python oracle
+  bc.py    — Betweenness Centrality (§2.6): exact Brandes on SSCA2 R-MAT
+             graphs as frontier matvecs; resumable per-vertex state machine;
+             + numpy oracle
+  rmat.py  — SSCA2 R-MAT graph generator
+"""
+from . import fib, uts, bc, rmat  # noqa: F401

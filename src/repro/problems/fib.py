@@ -1,0 +1,67 @@
+"""Naive recursive Fibonacci as a GLB problem — the paper's appendix example.
+
+A task is an integer i. Processing pops the newest task (the X10 code's
+``removeLast``): i < 2 adds i to the local result; otherwise tasks i-1 and
+i-2 are pushed. The bag is the paper's default ArrayList bag (split = half
+off the end). The root task lives at place 0 (``init`` at the root place).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import GLBProblem
+from repro.core import taskbag as tb
+
+ITEM_SPEC = {"n": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def fib_problem(n: int, capacity: int = 4096) -> GLBProblem:
+    def init_place(p, P):
+        bag = tb.make_bag(ITEM_SPEC, capacity)
+        bag = tb.push_one(bag, {"n": jnp.int32(n)})
+        bag["size"] = jnp.where(p == 0, bag["size"], 0)  # root task at place 0
+        state = {"result": jnp.zeros((), jnp.int32)}
+        return state, bag
+
+    def process(state, bag, budget: int):
+        def cond(c):
+            _, b, left = c
+            return (left > 0) & (b["size"] > 0) & (b["size"] + 2 <= capacity)
+
+        def body(c):
+            st, b, left = c
+            b, item = tb.pop_tail(b)
+            x = item["n"]
+            leaf = x < 2
+            st = {"result": st["result"] + jnp.where(leaf, x, 0)}
+            block = {"n": jnp.stack([x - 1, x - 2])}
+            b = tb.push_block(b, block, jnp.where(leaf, 0, 2).astype(jnp.int32))
+            return st, b, left - 1
+
+        state, bag, left = jax.lax.while_loop(
+            cond, body, (state, bag, jnp.int32(budget))
+        )
+        return state, bag, jnp.int32(budget) - left
+
+    def split(bag, k: int):
+        return tb.split_tail_half(bag, k)
+
+    return GLBProblem(
+        name="fib",
+        item_spec=ITEM_SPEC,
+        capacity=capacity,
+        init_place=init_place,
+        process=process,
+        split=split,
+        merge=tb.merge_packet,
+        result=lambda st: st["result"],
+        reduce_op="sum",
+    )
+
+
+def fib_oracle(n: int) -> int:
+    a, b = 0, 1
+    for _ in range(n):
+        a, b = b, a + b
+    return a

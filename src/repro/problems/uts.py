@@ -1,0 +1,230 @@
+"""Unbalanced Tree Search (paper §2.5) as a GLB problem.
+
+Tree: fixed geometric law, branching factor b0 (paper: 4), splittable-hash
+RNG seeded with r (paper: 19), depth cut-off d (paper: 13..20). A node's
+child count is geometric with mean b0 (clamped at MAX_CHILD; the tail beyond
+32 has probability 0.8^32 ≈ 8e-4, noted in DESIGN.md). All nodes are treated
+equally irrespective of depth, as the paper requires.
+
+Task representation is the paper's (§2.5.2): a task item is a tree node as a
+triple ``(descriptor, low, high)`` — descriptor is the node's hash state and
+[low, high) the interval of its unexplored children — plus the node depth.
+Split halves every (well, the oldest K) node's interval: n(d,l,h) ->
+keep n1(d,l,mid) / give n2(d,mid,h); nodes with a single child are not split
+("cheaper to count locally than move it"). Merge concatenates.
+
+The child-generation hash is a 32-bit finalizer (splitmix/murmur-style)
+computed identically by the jnp implementation and the pure-python oracle
+(`uts_oracle`); geometric sampling uses integer threshold compares so the two
+are bit-exact.
+
+This hot loop (hash a block of children + geometric counts) is the paper's
+``process`` hot spot and is what ``repro.kernels.uts_expand`` implements as a
+Pallas TPU kernel; here we use the jnp reference (kernels/ref.py shares it).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import GLBProblem
+from repro.core import taskbag as tb
+
+MAX_CHILD = 32
+
+ITEM_SPEC = {
+    "d0": jax.ShapeDtypeStruct((), jnp.uint32),
+    "d1": jax.ShapeDtypeStruct((), jnp.uint32),
+    "depth": jax.ShapeDtypeStruct((), jnp.int32),
+    "lo": jax.ShapeDtypeStruct((), jnp.int32),
+    "hi": jax.ShapeDtypeStruct((), jnp.int32),
+}
+
+# ---------------------------------------------------------------- hashing
+_C1, _C2, _C3, _C4 = 0x7FEB352D, 0x846CA68B, 0x9E3779B9, 0x85EBCA77
+
+
+def fmix32(h, xp):
+    """32-bit finalizer (splitmix/murmur-style avalanche)."""
+    u = xp.uint32
+    h = h ^ (h >> u(16))
+    h = h * u(_C1)
+    h = h ^ (h >> u(15))
+    h = h * u(_C2)
+    h = h ^ (h >> u(16))
+    return h
+
+
+def child_hash(d0, d1, i, xp):
+    """Splittable RNG: descriptor of child `i` of node (d0, d1)."""
+    u = xp.uint32
+    i = xp.asarray(i).astype(xp.uint32) if xp is np else i.astype(xp.uint32)
+    h0 = fmix32(d0 + i * u(_C3), xp)
+    h1 = fmix32((d1 ^ h0) + i * u(_C4), xp)
+    h0 = fmix32(h0 ^ h1, xp)
+    return h0, h1
+
+
+def geom_thresholds(b0: float) -> np.ndarray:
+    """T_k = floor(((b0/(1+b0))^k) * 2^32): child count = #{k: u < T_k}.
+
+    Integer compares keep jnp and numpy bit-identical; E[count] ~= b0."""
+    p_cont = b0 / (1.0 + b0)
+    t = np.floor((p_cont ** np.arange(1, MAX_CHILD + 1)) * 2.0**32)
+    return np.minimum(t, 2.0**32 - 1).astype(np.uint32)
+
+
+def child_count(h0, thresholds, xp):
+    u = h0[..., None] if xp is jnp else np.asarray(h0)[..., None]
+    return (u < thresholds).sum(axis=-1).astype(xp.int32)
+
+
+def root_desc(seed: int, xp):
+    u = xp.uint32
+    d0 = fmix32(u(seed) * u(_C3) + u(0x12345678), xp)
+    d1 = fmix32((u(seed) ^ u(0xDEADBEEF)) * u(_C4) + u(1), xp)
+    return d0, d1
+
+
+# ------------------------------------------------------------ GLB problem
+def uts_problem(
+    b0: float = 4.0,
+    depth: int = 8,
+    seed: int = 19,
+    capacity: int = 8192,
+    gen_width: int = 0,  # child-gen vector width; 0 => GLB n at call time
+) -> GLBProblem:
+    thresholds_np = geom_thresholds(b0)
+
+    # UTS convention: the root has exactly round(b0) children (a geometric
+    # draw would make ~1/(1+b0) of all trees trivially empty).
+    root_children = max(1, int(round(b0)))
+
+    def init_place(p, P):
+        bag = tb.make_bag(ITEM_SPEC, capacity)
+        d0, d1 = root_desc(seed, jnp)
+        m_root = jnp.int32(root_children if depth > 0 else 0)
+        root = {
+            "d0": d0,
+            "d1": d1,
+            "depth": jnp.int32(0),
+            "lo": jnp.int32(0),
+            "hi": m_root,
+        }
+        bag = tb.push_one(bag, root)
+        has_root = (p == 0) & (m_root > 0)
+        bag["size"] = jnp.where(has_root, bag["size"], 0)
+        # The root itself counts as one visited node (at place 0).
+        state = {"count": jnp.where(p == 0, 1, 0).astype(jnp.int32)}
+        return state, bag
+
+    def process(state, bag, budget: int):
+        width = gen_width or budget  # static block width for child hashing
+        thr = jnp.asarray(thresholds_np)
+
+        def cond(c):
+            _, b, left = c
+            room = b["size"] + width + 1 <= capacity
+            return (left > 0) & (b["size"] > 0) & room
+
+        def body(c):
+            st, b, left = c
+            b, node = tb.pop_tail(b)
+            c_total = node["hi"] - node["lo"]
+            g = jnp.minimum(c_total, left)
+
+            j = jnp.arange(width, dtype=jnp.int32)
+            mask = j < g
+            idx = node["lo"] + j
+            cd0, cd1 = child_hash(node["d0"], node["d1"], idx, jnp)
+            child_depth = node["depth"] + 1
+            m = jnp.where(
+                (child_depth < depth) & mask, child_count(cd0, thr, jnp), 0
+            )
+
+            # Parent remainder goes back first; children land on top (DFS).
+            rem = c_total - g
+            parent = {
+                "d0": node["d0"][None],
+                "d1": node["d1"][None],
+                "depth": node["depth"][None],
+                "lo": (node["lo"] + g)[None],
+                "hi": node["hi"][None],
+            }
+            b = tb.push_block(b, parent, (rem > 0).astype(jnp.int32))
+
+            child_block = {
+                "d0": cd0,
+                "d1": cd1,
+                "depth": jnp.full((width,), 0, jnp.int32) + child_depth,
+                "lo": jnp.zeros((width,), jnp.int32),
+                "hi": m,
+            }
+            child_block, n_child = tb.compact_block(child_block, mask & (m > 0))
+            b = tb.push_block(b, child_block, n_child)
+
+            st = {"count": st["count"] + g}
+            return st, b, left - g
+
+        state, bag, left = jax.lax.while_loop(
+            cond, body, (state, bag, jnp.int32(budget))
+        )
+        return state, bag, jnp.int32(budget) - left
+
+    def split(bag, k: int):
+        blk = tb.read_front(bag, k)
+        lane = jnp.arange(k, dtype=jnp.int32)
+        in_bag = lane < jnp.minimum(bag["size"], k)
+        c = blk["hi"] - blk["lo"]
+        splittable = in_bag & (c >= 2)  # paper: single-child nodes not split
+        mid = blk["lo"] + (c + 1) // 2  # keep ceil, give floor
+        keep = dict(blk, hi=jnp.where(splittable, mid, blk["hi"]))
+        bag2 = tb.write_front(bag, keep)
+        give = {
+            "d0": blk["d0"],
+            "d1": blk["d1"],
+            "depth": blk["depth"],
+            "lo": mid,
+            "hi": blk["hi"],
+        }
+        items, count = tb.compact_block(give, splittable)
+        return bag2, {"items": items, "count": count}
+
+    return GLBProblem(
+        name=f"uts-b{b0}-d{depth}",
+        item_spec=ITEM_SPEC,
+        capacity=capacity,
+        init_place=init_place,
+        process=process,
+        split=split,
+        merge=tb.merge_packet,
+        result=lambda st: st["count"],
+        reduce_op="sum",
+    )
+
+
+# ------------------------------------------------------------------ oracle
+def uts_oracle(b0: float = 4.0, depth: int = 8, seed: int = 19) -> int:
+    """Sequential pure-python/numpy tree count, bit-identical hashing."""
+    thr = geom_thresholds(b0)
+    with np.errstate(over="ignore"):
+        d0, d1 = root_desc(seed, np)
+        count = 1
+        if depth <= 0:
+            return count
+        m_root = max(1, int(round(b0)))  # fixed root branching, as above
+        stack = [(np.uint32(d0), np.uint32(d1), 0, m_root)]
+        while stack:
+            p0, p1, dep, m = stack.pop()
+            idx = np.arange(m, dtype=np.uint32)
+            c0, c1 = child_hash(p0, p1, idx, np)
+            count += m
+            if dep + 1 < depth:
+                mc = child_count(c0, thr, np)
+                for i in range(m):
+                    if mc[i] > 0:
+                        stack.append(
+                            (np.uint32(c0[i]), np.uint32(c1[i]), dep + 1, int(mc[i]))
+                        )
+        return count

@@ -1,0 +1,172 @@
+"""Serving engine: continuous batching over decode slots + GLB request
+balancing across replicas.
+
+Each replica owns a fixed pool of decode slots (static shapes). New
+requests prefill into a free slot (prompts padded to a bucket length); all
+active slots advance one token per engine step in a single batched decode
+with per-slot cache lengths (-1 marks an idle slot: its cache/state is
+untouched). The multi-replica balancer treats per-replica queue depth as
+the GLB size vector and moves queued requests from overloaded to idle
+replicas with the same deterministic matching the task scheduler uses —
+the paper's library applied to serving (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import GLBParams, lifeline_buddies, match_steals
+from repro.models import decode_step, forward, make_cache
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _make_fns(cfg: ModelConfig, max_seq: int, pad_len: int):
+    @jax.jit
+    def prefill_into_slot(params, tokens, cache, slot):
+        row = make_cache(cfg, 1, max_seq, dtype=jnp.float32)
+        logits, row, _ = forward(
+            params, cfg, tokens=tokens, cache=row,
+            cache_len=jnp.int32(0), mode="prefill",
+        )
+        def put(c, r):
+            start = (0, slot) + (0,) * (c.ndim - 2)
+            return jax.lax.dynamic_update_slice(c, r.astype(c.dtype), start)
+        cache = jax.tree.map(put, cache, row)
+        return logits[0, :, ..., : cfg.vocab], cache
+
+    @jax.jit
+    def decode(params, tokens, cache, lens):
+        logits, cache = decode_step(params, cfg, tokens, cache, lens)
+        nxt = jnp.argmax(logits[:, 0, ..., : cfg.vocab], axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return prefill_into_slot, decode
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
+                 max_seq: int = 256, pad_len: int = 32):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.pad_len = pad_len
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.lens = np.full(max_slots, -1, np.int32)   # -1 => idle slot
+        self.cache = make_cache(cfg, max_slots, max_seq, dtype=jnp.float32)
+        self.tokens = np.zeros((max_slots, 1), np.int32)
+        self._prefill, self._decode = _make_fns(cfg, max_seq, pad_len)
+        self.steps = 0
+        self.tokens_out = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    @property
+    def load(self) -> int:
+        return len(self.queue) + sum(s is not None for s in self.slots)
+
+    def _admit(self):
+        for i in range(self.max_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                true_len = min(len(req.prompt), self.pad_len)
+                toks = np.zeros((1, self.pad_len), np.int32)
+                toks[0, :true_len] = req.prompt[:true_len]
+                logits, self.cache = self._prefill(
+                    self.params, jnp.asarray(toks), self.cache, i
+                )
+                first = int(np.asarray(logits)[true_len - 1].argmax())
+                req.out.append(first)
+                self.slots[i] = req
+                self.lens[i] = true_len
+                self.tokens[i, 0] = first
+                self.tokens_out += 1
+
+    def step(self):
+        """One engine iteration: admit, then ONE batched decode for all
+        active slots (idle slots carry lens=-1 and stay untouched)."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return
+        nxt, self.cache = self._decode(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.lens),
+        )
+        nxt = np.asarray(nxt)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.out.append(tok)
+            self.tokens[i, 0] = tok
+            self.lens[i] += 1
+            self.tokens_out += 1
+            if (len(req.out) > req.max_new
+                    or self.lens[i] >= self.max_seq - 1):
+                req.done = True
+                self.slots[i] = None
+                self.lens[i] = -1
+        self.steps += 1
+
+
+class GLBReplicaBalancer:
+    """GLB over replicas: queue depths are the size vector; hungry replicas
+    steal queued requests via the deterministic matching."""
+
+    def __init__(self, engines: List[Engine],
+                 params: GLBParams = GLBParams()):
+        self.engines = engines
+        self.params = params
+        P = len(engines)
+        z = params.resolve_z(P)
+        self._buddies = jnp.asarray(lifeline_buddies(P, z))
+        self._pending = jnp.zeros((P, P), bool)
+        self._step = 0
+        self.moves = 0
+
+    def submit(self, req: Request, rr: Optional[int] = None):
+        i = (req.rid if rr is None else rr) % len(self.engines)
+        self.engines[i].submit(req)
+
+    def balance(self):
+        sizes = np.asarray([len(e.queue) for e in self.engines], np.int32)
+        hungry = np.asarray([e.load == 0 for e in self.engines])
+        m = match_steals(
+            jnp.asarray(sizes), jnp.asarray(hungry), self._pending,
+            jax.random.fold_in(jax.random.key(17), self._step),
+            self._buddies, self.params,
+        )
+        self._pending = m.pending
+        src = np.asarray(m.src)
+        for thief, victim in enumerate(src):
+            if victim < 0:
+                continue
+            v = self.engines[int(victim)]
+            take = max(1, len(v.queue) // 2)
+            for _ in range(min(take, len(v.queue))):
+                self.engines[thief].submit(v.queue.pop())
+                self.moves += 1
+        self._step += 1
+
+    def run(self, max_steps: int = 10_000):
+        while any(e.load > 0 for e in self.engines) and max_steps > 0:
+            self.balance()
+            for e in self.engines:
+                e.step()
+            max_steps -= 1

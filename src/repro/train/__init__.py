@@ -1,0 +1,1 @@
+"""Training substrate: hand-rolled AdamW + schedules, step builders."""

@@ -1,0 +1,86 @@
+"""Step builders: train_step / prefill_step / decode_step factories.
+
+These are the functions the launcher jits with shardings and the dry-run
+lowers at 512 devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as _decode, prefill as _prefill, train_loss
+from repro.models.config import ModelConfig
+
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, microbatches: int = 1):
+    """Training step with optional gradient accumulation. The microbatch
+    loop is UNROLLED (microbatches is small) so activation residency drops
+    ~microbatches-x while XLA cost analysis still counts every pass —
+    see EXPERIMENTS §Perf."""
+
+    def grad_of(params, b):
+        return jax.value_and_grad(
+            lambda p: train_loss(p, cfg, b), has_aux=True
+        )(params)
+
+    def train_step(params, opt, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+            grads = None
+            metrics = None
+            for i in range(microbatches):
+                b = jax.tree.map(lambda x: x[i], mbs)
+                (_, m), g = grad_of(params, b)
+                g = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+                grads = g if grads is None else jax.tree.map(
+                    jnp.add, grads, g)
+                metrics = m if metrics is None else jax.tree.map(
+                    jnp.add, metrics, m)
+            grads = jax.tree.map(lambda a: a / microbatches, grads)
+            metrics = {
+                k: (v if k == "expert_counts" else v / microbatches)
+                for k, v in metrics.items()
+            }
+        params, opt, om = adamw_update(params, grads, opt, oc)
+        metrics = dict(metrics, **om)
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        logits, cache = _prefill(params, cfg, batch, max_seq=max_seq)
+        # serving returns only the last-position logits (greedy head here;
+        # sampling lives in serve/engine.py)
+        next_tok = jnp.argmax(logits[:, -1:, ..., : cfg.vocab], axis=-1)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_one(params, tokens, cache, cache_len):
+        logits, cache = _decode(params, cfg, tokens, cache, cache_len)
+        next_tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1)
+        return next_tok, cache
+
+    return decode_one
+
+
+def init_train_state(key, cfg: ModelConfig):
+    from repro.models import init_lm
+
+    params = init_lm(key, cfg)
+    return params, adamw_init(params)

@@ -1,0 +1,15 @@
+"""Shared pytest fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see exactly 1 device (the 512-device override lives only in
+launch/dryrun.py; multi-device executor tests use subprocesses)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,76 @@
+"""Distributed executor == simulated scheduler, on 8 real host devices.
+
+Run in a subprocess because XLA fixes the device count at first init and the
+rest of the suite must see exactly 1 device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from repro.core import GLB, GLBParams, run_sim
+from repro.problems.uts import uts_problem, uts_oracle
+from repro.problems.fib import fib_problem, fib_oracle
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("place",))
+out = {}
+
+prob = uts_problem(depth=6)
+params = GLBParams(n=64, w=2, steal_k=32)
+sim = run_sim(prob, 8, params, seed=0)
+out["oracle"] = uts_oracle(depth=6)
+out["sim"] = int(sim.result)
+out["sim_steps"] = int(sim.supersteps)
+for routing in ("dense", "lifeline"):
+    glb = GLB(prob, params, mesh=mesh, mode="shard_map", routing=routing)
+    r = glb.run(seed=0)
+    out[routing] = int(r)
+    out[routing + "_steps"] = glb.supersteps
+    out[routing + "_stats_equal"] = all(
+        np.array_equal(np.asarray(sim.stats[k]), np.asarray(glb.stats[k]))
+        for k in sim.stats
+    )
+
+# fib via shard_map too (generic tail-split bag exercises packet masking)
+fp = fib_problem(15)
+fparams = GLBParams(n=8, steal_k=8)
+fsim = run_sim(fp, 8, fparams, seed=0)
+fglb = GLB(fp, fparams, mesh=mesh, mode="shard_map", routing="lifeline")
+out["fib"] = int(fglb.run(seed=0))
+out["fib_oracle"] = fib_oracle(15)
+out["fib_sim"] = int(fsim.result)
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_shardmap_equals_sim_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][-1]
+    out = json.loads(line[len("RESULT"):])
+    assert out["sim"] == out["oracle"]
+    for routing in ("dense", "lifeline"):
+        assert out[routing] == out["oracle"]
+        assert out[routing + "_steps"] == out["sim_steps"]
+        assert out[routing + "_stats_equal"], (
+            f"{routing} executor diverged from sim scheduler"
+        )
+    assert out["fib"] == out["fib_oracle"] == out["fib_sim"]

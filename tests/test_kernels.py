@@ -1,0 +1,188 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_ssd import ssd_chunked
+from repro.kernels.uts_expand import uts_expand
+from repro.problems.uts import geom_thresholds
+
+KEY = jax.random.key(42)
+
+
+# ------------------------------------------------------- flash attention
+@pytest.mark.parametrize(
+    "B,Sq,Skv,Hq,Hkv,D",
+    [
+        (1, 128, 128, 4, 2, 64),    # GQA, square
+        (2, 64, 64, 2, 2, 32),      # MHA, small
+        (1, 1, 256, 8, 2, 64),      # decode: one query vs cache
+        (1, 128, 384, 6, 3, 64),    # prefill continuation (Skv > Sq)
+        (1, 256, 256, 4, 1, 128),   # MQA, full head_dim
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Sq, Skv, Hq, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, hash((Sq, Skv, Hq, D)) % (2**31)), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True,
+                          block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out = flash_attention(q, k, v, causal=False, interpret=True,
+                          block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ------------------------------------------------------------ mamba2 ssd
+@pytest.mark.parametrize(
+    "Bt,T,H,P,N,chunk",
+    [
+        (1, 128, 2, 64, 64, 32),
+        (2, 64, 4, 32, 128, 64),
+        (1, 256, 3, 64, 64, 64),
+        (1, 64, 1, 128, 64, 16),
+    ],
+)
+def test_ssd_matches_scan(Bt, T, H, P, N, chunk):
+    ks = jax.random.split(jax.random.fold_in(KEY, hash((T, H, P, N)) % (2**31)), 5)
+    x = jax.random.normal(ks[0], (Bt, T, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, T, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bt, T, N))
+    C = jax.random.normal(ks[4], (Bt, T, N))
+    y, h = ssd_chunked(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yr, hr = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=5e-5, rtol=1e-4)
+
+
+def test_ssd_bf16_inputs():
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (1, 64, 2, 32), jnp.bfloat16)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 2))) * 0.1)
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    B = jax.random.normal(ks[3], (1, 64, 64))
+    C = jax.random.normal(ks[4], (1, 64, 64))
+    y, h = ssd_chunked(x, dt, A, B, C, chunk=32, interpret=True)
+    yr, hr = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), atol=0.05, rtol=0.05
+    )
+
+
+# ------------------------------------------------------------ uts_expand
+@pytest.mark.parametrize("M,width,block_m", [(128, 64, 128), (256, 32, 64), (64, 8, 64)])
+def test_uts_expand_matches_ref(M, width, block_m):
+    ks = jax.random.split(jax.random.fold_in(KEY, M + width), 3)
+    d0 = jax.random.randint(ks[0], (M,), 0, 1 << 30, jnp.int32).astype(jnp.uint32)
+    d1 = jax.random.randint(ks[1], (M,), 0, 1 << 30, jnp.int32).astype(jnp.uint32)
+    base = jax.random.randint(ks[2], (M,), 0, 100, jnp.int32)
+    thr = jnp.asarray(geom_thresholds(4.0))
+    cd0, cd1, m = uts_expand(d0, d1, base, thr, width=width,
+                             block_m=block_m, interpret=True)
+    rd0, rd1, rm = ref.uts_expand_ref(d0, d1, base, thr, width)
+    np.testing.assert_array_equal(np.asarray(cd0), np.asarray(rd0))
+    np.testing.assert_array_equal(np.asarray(cd1), np.asarray(rd1))
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(rm))
+
+
+def test_uts_expand_matches_python_oracle():
+    """Kernel hashing must be bit-identical to the sequential python oracle
+    (the same functions the GLB UTS problem uses)."""
+    from repro.problems.uts import child_hash
+
+    d0 = jnp.asarray([12345], jnp.uint32)
+    d1 = jnp.asarray([67890], jnp.uint32)
+    base = jnp.asarray([0], jnp.int32)
+    thr = jnp.asarray(geom_thresholds(4.0))
+    cd0, cd1, m = uts_expand(d0, d1, base, thr, width=16, interpret=True)
+    pd0, pd1 = child_hash(np.uint32(12345), np.uint32(67890),
+                          np.arange(16, dtype=np.uint32), np)
+    np.testing.assert_array_equal(np.asarray(cd0)[0], pd0)
+    np.testing.assert_array_equal(np.asarray(cd1)[0], pd1)
+
+
+# --------------------------------------------------------------- moe_gmm
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.moe_gmm import gmm
+
+
+@pytest.mark.parametrize(
+    "T,D,F,E,bt,bf",
+    [
+        (256, 64, 128, 4, 64, 64),
+        (128, 32, 64, 8, 128, 64),
+        (512, 16, 32, 2, 64, 32),
+    ],
+)
+def test_gmm_matches_ref(T, D, F, E, bt, bf):
+    ks = jax.random.split(jax.random.fold_in(KEY, T + E), 3)
+    x = jax.random.normal(ks[0], (T, D), jnp.float32)
+    w = jax.random.normal(ks[1], (E, D, F), jnp.float32)
+    # random group sizes summing to <= T (tail rows belong to no expert
+    # per ref semantics: searchsorted clips to the last expert, so make
+    # sizes sum exactly to T)
+    raw = np.asarray(jax.random.dirichlet(ks[2], jnp.ones(E)) * T, np.int64)
+    raw[-1] = T - raw[:-1].sum()
+    gs = jnp.asarray(raw, jnp.int32)
+    out = gmm(x, w, gs, block_t=bt, block_f=bf, interpret=True)
+    want = ref.gmm_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes=st.lists(st.integers(0, 64), min_size=2, max_size=6))
+def test_gmm_group_edges(sizes):
+    """Empty groups and group boundaries inside a tile must be exact."""
+    E = len(sizes)
+    T = 128
+    total = sum(sizes)
+    if total > T or total == 0:
+        return
+    sizes = list(sizes)
+    sizes[-1] += T - total  # pad the last group to fill T
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (T, 16), jnp.float32)
+    w = jax.random.normal(ks[1], (E, 16, 32), jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    out = gmm(x, w, gs, block_t=64, block_f=32, interpret=True)
+    want = ref.gmm_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_rank_within_expert_matches_cumsum():
+    """The sort-based queue ranking (EXPERIMENTS §Perf M2) must equal the
+    dense one-hot cumsum definition."""
+    from repro.models.moe import _rank_within_expert
+
+    E = 8
+    ids = jax.random.randint(KEY, (500,), 0, E)
+    pos, counts = _rank_within_expert(ids, E)
+    onehot = jax.nn.one_hot(ids, E)
+    want = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(-1)
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(want, np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.asarray(onehot.sum(0), np.int32)
+    )

@@ -1,0 +1,129 @@
+"""Topology + matching properties for the lifeline machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GLBParams, lifeline_buddies, lifeline_mask, match_steals
+
+
+@pytest.mark.parametrize("P,z", [(2, 1), (4, 2), (8, 3), (13, 4), (16, 4), (512, 9)])
+def test_buddies_distinct_and_never_self(P, z):
+    b = lifeline_buddies(P, z)
+    assert b.shape == (P, z)
+    for p in range(P):
+        assert len(set(b[p])) == z          # distinct buddies
+        assert p not in b[p]                # never self
+
+
+@pytest.mark.parametrize("P,z", [(4, 2), (8, 3), (16, 4), (32, 5)])
+def test_lifeline_graph_connected_low_diameter(P, z):
+    """Paper §2.4: fully connected directed graph, low diameter, low degree."""
+    m = lifeline_mask(P, z)
+    assert m.sum(axis=1).max() == z  # out-degree z
+    # BFS from every vertex along edges t -> buddy
+    import collections
+
+    for s in range(P):
+        seen = {s}
+        q = collections.deque([(s, 0)])
+        diam = 0
+        while q:
+            u, d = q.popleft()
+            diam = max(diam, d)
+            for v in np.nonzero(m[u])[0]:
+                if v not in seen:
+                    seen.add(int(v))
+                    q.append((int(v), d + 1))
+        assert len(seen) == P, "lifeline graph must be connected"
+        assert diam <= 2 * z, "diameter must stay O(log P)"
+
+
+def _match(P, sizes, pending=None, params=None, seed=0):
+    params = params or GLBParams()
+    z = params.resolve_z(P)
+    buddies = jnp.asarray(lifeline_buddies(P, z))
+    sizes = jnp.asarray(sizes, jnp.int32)
+    hungry = sizes == 0
+    pend = (
+        jnp.zeros((P, P), bool) if pending is None else jnp.asarray(pending)
+    )
+    return match_steals(sizes, hungry, pend, jax.random.key(seed), buddies, params)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    sizes=st.lists(st.integers(0, 20), min_size=2, max_size=24),
+    seed=st.integers(0, 1000),
+)
+def test_match_is_partial_permutation(sizes, seed):
+    P = len(sizes)
+    m = _match(P, sizes, seed=seed)
+    src = np.asarray(m.src)
+    dst = np.asarray(m.dst)
+    for t in range(P):
+        v = src[t]
+        if v >= 0:
+            assert sizes[t] == 0, "only hungry places steal"
+            assert sizes[v] >= 1, "victims must have work"
+            assert dst[v] == t, "src/dst must be consistent"
+            assert v != t
+    # each victim serves at most one thief
+    served = dst[dst >= 0]
+    assert len(served) == len(set(served.tolist()))
+    matched_thieves = src[src >= 0]
+    assert len(np.nonzero(dst >= 0)[0]) == len(matched_thieves)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_match_thief_with_one_victim_connects(seed):
+    # One victim with plenty of work, everyone else starving: with lifelines
+    # being a connected graph + random round, at least one thief is served.
+    P = 8
+    sizes = [0] * P
+    sizes[3] = 100
+    m = _match(P, sizes, seed=seed)
+    assert (np.asarray(m.src) >= 0).sum() == 1
+    assert np.asarray(m.dst)[3] >= 0
+
+
+def test_pending_registration_and_service():
+    P = 8
+    params = GLBParams(w=0)  # disable random round to isolate lifelines
+    # Step 1: everyone starving, nobody can give -> everyone registers
+    m1 = _match(P, [0] * P, params=params)
+    pend = np.asarray(m1.pending)
+    z = params.resolve_z(P)
+    assert pend.sum() == P * z
+    assert (np.asarray(m1.src) == -1).all()
+    # Step 2: place 1 now has work; its pending edges get served
+    m2 = _match(P, [0, 50] + [0] * (P - 2), pending=m1.pending, params=params)
+    src = np.asarray(m2.src)
+    assert (src >= 0).sum() == 1
+    t = int(np.nonzero(src >= 0)[0][0])
+    assert src[t] == 1
+    assert bool(np.asarray(m2.via_lifeline)[t])
+    # served thief's pending row is cleared
+    assert not np.asarray(m2.pending)[t].any()
+
+
+def test_no_steal_baseline():
+    m = _match(8, [0, 9, 9, 0, 9, 9, 0, 9], params=GLBParams(no_steal=True))
+    assert (np.asarray(m.src) == -1).all()
+    assert (np.asarray(m.dst) == -1).all()
+
+
+def test_busy_place_does_not_steal():
+    """A place with in-progress state work (hungry=False) must not steal."""
+    P = 4
+    params = GLBParams()
+    z = params.resolve_z(P)
+    buddies = jnp.asarray(lifeline_buddies(P, z))
+    sizes = jnp.asarray([0, 0, 5, 5], jnp.int32)
+    hungry = jnp.asarray([False, True, False, False])  # 0 is busy in-state
+    m = match_steals(sizes, hungry, jnp.zeros((P, P), bool),
+                     jax.random.key(0), buddies, params)
+    assert int(np.asarray(m.src)[0]) == -1
+    assert int(np.asarray(m.src)[1]) >= 2

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train step + one prefill/decode step on CPU; shape and finiteness
+asserts. Full configs are exercised only via the dry-run (no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import (
+    SHAPES, decode_step, forward, init_lm, make_cache, prefill, train_loss,
+)
+
+KEY = jax.random.key(0)
+B, S = 2, 32
+
+
+def _smoke_batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.random.normal(ks[0], (B, S, cfg.d_model), jnp.float32),
+            "positions": jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, 3)
+            ),
+            "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab),
+        }
+    if cfg.n_codebooks:
+        return {
+            "tokens": jax.random.randint(
+                ks[0], (B, S, cfg.n_codebooks), 0, cfg.vocab
+            )
+        }
+    return {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_and_train_step(arch):
+    cfg = ARCHS[arch].smoke()
+    params = init_lm(jax.random.fold_in(KEY, 1), cfg)
+    batch = _smoke_batch(cfg, jax.random.fold_in(KEY, 2))
+
+    loss, metrics = jax.jit(
+        lambda p, b: train_loss(p, cfg, b)
+    )(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+
+    # one SGD step must change the loss and keep it finite (grads flow)
+    grads = jax.jit(jax.grad(lambda p, b: train_loss(p, cfg, b)[0]))(
+        params, batch
+    )
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, f"{arch}: bad grads"
+    params2 = jax.tree.map(lambda p, g: p - 1e-2 * g, params, grads)
+    loss2, _ = jax.jit(lambda p, b: train_loss(p, cfg, b))(params2, batch)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_consistency(arch):
+    """Decode must continue a prefilled cache: logits of position t computed
+    via (prefill to t-1, then decode token t) must match a full forward."""
+    cfg = ARCHS[arch].smoke()
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode uses embeds path; covered via qwen2-1.5b twin")
+    if cfg.family == "moe":
+        # capacity drops legitimately differ between teacher-forced and
+        # incremental passes; disable drops for the consistency check
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = init_lm(jax.random.fold_in(KEY, 3), cfg)
+    tok_shape = (1, S, cfg.n_codebooks) if cfg.n_codebooks else (1, S)
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 4), tok_shape, 0, cfg.vocab)
+
+    # full forward (teacher forcing)
+    logits_full, _, _ = jax.jit(
+        lambda p, t: forward(p, cfg, tokens=t, mode="train")
+    )(params, tokens)
+
+    # prefill first S-1 tokens, then decode token S-1
+    prompt = tokens[:, : S - 1]
+    logits_pre, cache = jax.jit(
+        lambda p, t: prefill(params, cfg, {"tokens": t}, max_seq=S - 1)
+    )(params, prompt)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, -1], np.float32),
+        np.asarray(logits_full[:, S - 2], np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+    # decode needs cache sized >= prompt+1: rebuild with slack
+    cache2 = make_cache(cfg, 1, S)
+    logits_pre2, cache2, _ = jax.jit(
+        lambda p, t, c: forward(p, cfg, tokens=t, cache=c,
+                                cache_len=jnp.int32(0), mode="prefill")
+    )(params, tokens[:, : S - 1]
+      if not cfg.n_codebooks else tokens[:, : S - 1], cache2)
+    last = tokens[:, S - 1:S]
+    logits_dec, _ = jax.jit(
+        lambda p, t, c: decode_step(p, cfg, t, c, jnp.int32(S - 1))
+    )(params, last, cache2)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_full[:, S - 1], np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+def test_moe_aux_metrics_present():
+    cfg = ARCHS["moonshot-v1-16b-a3b"].smoke()
+    params = init_lm(KEY, cfg)
+    batch = _smoke_batch(cfg, KEY)
+    _, metrics = jax.jit(lambda p, b: train_loss(p, cfg, b))(params, batch)
+    assert "aux_loss" in metrics and "expert_counts" in metrics
+    counts = np.asarray(metrics["expert_counts"])
+    assert counts.shape == (cfg.n_experts,)
+    # every routed token lands on top_k experts x n_layers
+    assert counts.sum() == pytest.approx(B * S * cfg.top_k * cfg.n_layers)
+
+
+def test_param_counts_sane():
+    # full configs: N within 25% of the advertised sizes
+    expect = {
+        "tinyllama-1.1b": 1.1e9,
+        "qwen1.5-110b": 110e9,
+        "mistral-nemo-12b": 12e9,
+        "mamba2-130m": 130e6,
+        "phi3.5-moe-42b-a6.6b": 42e9,
+    }
+    for name, n in expect.items():
+        got = ARCHS[name].param_count()
+        assert abs(got - n) / n < 0.25, f"{name}: {got:.3g} vs {n:.3g}"
+    # active < total for moe
+    moe = ARCHS["phi3.5-moe-42b-a6.6b"]
+    assert moe.active_param_count() < moe.param_count() / 3

@@ -1,0 +1,51 @@
+"""Pipeline parallelism == sequential forward (4 stages, subprocess)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.dist.pipeline import pipeline_forward, split_layers_into_stages
+
+L, D, M, MB = 8, 16, 6, 4
+key = jax.random.key(0)
+Ws = jax.random.normal(key, (L, D, D)) * 0.3
+x = jax.random.normal(jax.random.fold_in(key, 1), (M, MB, D))
+
+def apply_layers(Ws, h):
+    for i in range(Ws.shape[0]):
+        h = jax.nn.relu(h @ Ws[i])
+    return h
+
+# sequential reference
+ref = jnp.stack([apply_layers(Ws, x[m]) for m in range(M)])
+
+mesh = jax.make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
+stages = split_layers_into_stages({"w": Ws}, 4)
+out = pipeline_forward(
+    lambda p, h: apply_layers(p["w"], h), stages, x, mesh, axis="stage"
+)
+err = float(jnp.abs(out - ref).max())
+print("RESULT" + json.dumps({"err": err}))
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][-1]
+    assert json.loads(line[len("RESULT"):])["err"] < 1e-5

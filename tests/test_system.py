@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests for the paper's system claims.
+
+The paper's evaluation (§3): UTS-G and BC-G achieve near-linear speedup,
+near-perfect efficiency, and near-perfect load balance, with results
+identical to the sequential computation. These are the laptop-scale
+versions of those claims.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GLBParams, run_sim
+from repro.problems.bc import bc_problem
+from repro.problems.rmat import rmat_graph
+from repro.problems.uts import uts_oracle, uts_problem
+
+
+def test_uts_efficiency_and_balance_at_8_places():
+    """Paper Fig 2/3: efficiency ~1 and flat workload distribution."""
+    params = GLBParams(n=256, w=2, steal_k=64)
+    oracle = uts_oracle(4.0, 9, 19)
+    out = run_sim(uts_problem(4.0, 9, 19), 8, params, seed=0)
+    assert int(out.result) == oracle
+    steps = int(out.supersteps)
+    eff = oracle / (steps * 8 * params.n)
+    assert eff > 0.75, f"superstep efficiency {eff:.3f} too low"
+    w = np.asarray(out.stats["processed"], np.float64)
+    assert w.std() / w.mean() < 0.15, "workload distribution not flat"
+
+
+def test_uts_speedup_scaling():
+    """Makespan (supersteps) must shrink ~linearly with places."""
+    params = GLBParams(n=64, w=2, steal_k=64)
+    prob = uts_problem(4.0, 8, 19)
+    steps = {}
+    for P in (1, 4, 16):
+        out = run_sim(prob, P, params, seed=0)
+        steps[P] = int(out.supersteps)
+    assert steps[4] < steps[1] / 2.5, steps
+    assert steps[16] < steps[4] / 2.0, steps
+
+
+def test_bc_speedup_and_identical_result():
+    adj, n = rmat_graph(scale=6, seed=5)
+    prob = bc_problem(adj, capacity=512)
+    params = GLBParams(n=4, w=2, steal_k=16)
+    r1 = run_sim(prob, 1, params, seed=0)
+    r8 = run_sim(prob, 8, params, seed=0)
+    np.testing.assert_allclose(
+        np.asarray(r1.result), np.asarray(r8.result), rtol=1e-4, atol=1e-3
+    )
+    assert int(r8.supersteps) < int(r1.supersteps) / 4
+
+
+@pytest.mark.slow
+def test_train_loop_reduces_loss():
+    from repro.launch.train import train
+
+    _, _, history = train([
+        "--arch", "tinyllama-1.1b", "--preset", "tiny",
+        "--steps", "60", "--batch", "8", "--seq", "64",
+        "--lr", "3e-3", "--log-every", "20",
+    ])
+    assert history[-1]["loss"] < history[0]["loss"] - 0.3
