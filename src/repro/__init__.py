@@ -5,4 +5,6 @@ repro.problems; the LM training/serving stack that hosts the technique as a
 first-class feature (MoE expert placement, serving-replica balancing) in
 the sibling subpackages. See DESIGN.md / EXPERIMENTS.md at the repo root.
 """
+from . import _jaxcompat  # noqa: F401  (backfills modern jax APIs on 0.4.x)
+
 __version__ = "1.0.0"

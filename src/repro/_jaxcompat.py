@@ -1,0 +1,122 @@
+"""Compatibility layer for older jax releases (the image ships 0.4.37).
+
+The codebase is written against the modern sharding surface — the
+``jax.shard_map`` entry point, ``jax.sharding.AxisType`` /
+``set_mesh`` / ``get_abstract_mesh``, ``jax.make_mesh(axis_types=...)``
+and ``jax.tree.leaves_with_path`` — which landed after 0.4.37. Importing
+this module backfills whichever of those are missing, delegating to the
+equivalent 0.4.x APIs (``jax.experimental.shard_map``, mesh context
+managers, ``jax.tree_util``). On a jax that already provides them this
+module is a no-op, so the code keeps working unmodified after an upgrade.
+
+Loaded from ``repro/__init__.py`` (any ``import repro...``) and from
+``src/sitecustomize.py`` (any interpreter started with ``PYTHONPATH=src``,
+which covers the subprocess-based multi-device tests that touch
+``jax.sharding.AxisType`` before importing repro).
+
+Nothing here initializes a backend: only module attributes are defined,
+so ``XLA_FLAGS`` set after import (e.g. the forced host device count in
+launch/dryrun.py and the subprocess tests) still takes effect.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import threading
+
+
+def _install() -> None:
+    import jax
+    import jax.sharding as jsharding
+    import jax.tree_util as jtu
+
+    # ------------------------------------------------ jax.sharding.AxisType
+    if not hasattr(jsharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jsharding.AxisType = AxisType
+
+    # ------------------------------------------- jax.make_mesh(axis_types=)
+    import inspect
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            # 0.4.x meshes are implicitly fully "auto"; the hint is dropped.
+            del axis_types
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    # ------------------------------------------------------- jax.shard_map
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                      **kwargs):
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=bool(check_vma),
+                              **kwargs)
+
+        jax.shard_map = shard_map
+
+    # -------------------------------- set_mesh / get_abstract_mesh ambient
+    if not hasattr(jsharding, "set_mesh"):
+        _state = threading.local()
+
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            prev = getattr(_state, "mesh", None)
+            _state.mesh = mesh
+            try:
+                # enter the legacy physical-mesh context too, so pjit picks
+                # the mesh up for unspecified shardings
+                with mesh:
+                    yield mesh
+            finally:
+                _state.mesh = prev
+
+        def get_abstract_mesh():
+            m = getattr(_state, "mesh", None)
+            if m is not None:
+                return m
+            try:
+                from jax._src import mesh as mesh_lib
+
+                phys = mesh_lib.thread_resources.env.physical_mesh
+                if phys is not None and not phys.empty:
+                    return phys
+            except Exception:  # noqa: BLE001 - internal layout drift
+                pass
+            return None
+
+        jsharding.set_mesh = set_mesh
+        jsharding.get_abstract_mesh = get_abstract_mesh
+
+    # ---------------------------------------------------- jax.lax.axis_size
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            from jax._src import core as _core
+
+            # 0.4.x: axis_frame(name) IS the static int size of the axis
+            return _core.axis_frame(axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    # ------------------------------------------ jax.tree.leaves_with_path
+    import jax.tree
+
+    if not hasattr(jax.tree, "leaves_with_path"):
+        jax.tree.leaves_with_path = jtu.tree_leaves_with_path
+    if not hasattr(jax.tree, "flatten_with_path"):
+        jax.tree.flatten_with_path = jtu.tree_flatten_with_path
+
+
+_install()

@@ -8,7 +8,6 @@ from __future__ import annotations
 import json
 import os
 import sys
-from collections import defaultdict
 
 
 def load(dirpath: str):

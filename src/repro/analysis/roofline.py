@@ -12,7 +12,7 @@ flags remat/redundancy waste via the useful-compute ratio.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 # TPU v5e-class hardware constants (per chip), per the assignment.
 PEAK_FLOPS = 197e12      # bf16

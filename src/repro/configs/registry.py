@@ -11,7 +11,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.config import ModelConfig, ShapeConfig
 
 from .musicgen_medium import CONFIG as musicgen_medium
 from .tinyllama_1_1b import CONFIG as tinyllama_1_1b
@@ -85,7 +85,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, object]:
         return {"tokens": f((B, S), i32)}
 
     # decode: one new token against a cache of size S
-    from repro.models.transformer import make_cache, n_attn_caches
+    from repro.models.transformer import make_cache
 
     cache = jax.eval_shape(lambda: make_cache(cfg, B, S))
     tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Iterable, NamedTuple, Optional, Sequence
+from typing import NamedTuple, Sequence
 
 import numpy as np
 

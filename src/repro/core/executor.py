@@ -17,7 +17,6 @@ schedule — the APGAS request/response protocol with zero protocol messages.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple
 
 import jax
@@ -28,7 +27,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .lifeline import lifeline_buddies, match_steals
 from .params import GLBParams
 from .problem import GLBProblem
-from .stats import FIELDS, init_stats
+from .stats import FIELDS
 
 
 class GLBDistRun(NamedTuple):

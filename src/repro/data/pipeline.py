@@ -8,11 +8,11 @@ distribution creates the packing irregularity the GLB balancer cares about.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import numpy as np
 
-from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.config import ModelConfig
 
 
 @dataclasses.dataclass

@@ -1,0 +1,35 @@
+"""repro.dist — the static-partitioning half of the GLB thesis (DESIGN.md §5).
+
+The lifeline work-stealer (repro.core) balances *dynamic* workloads at run
+time; this package is its static counterpart: it decides, before the program
+runs, how every model / optimizer / cache / activation tensor is laid out
+over the mesh the GLB executor runs on.
+
+  sharding : logical-axis rule engine — params, inputs, caches and
+             activations name *logical* axes ("embed", "qkv", "batch", ...)
+             and the engine resolves them to mesh PartitionSpecs with
+             divisibility fallback and per-tensor conflict resolution.
+  compress : int8 error-feedback gradient compression for the multi-pod
+             DCN-crossing data-parallel sync.
+  pipeline : microbatched GPipe-style pipeline parallelism over a `stage`
+             mesh axis.
+"""
+from .compress import compressed_psum_mean, init_error, quantize_roundtrip
+from .pipeline import pipeline_forward, split_layers_into_stages
+from .sharding import (
+    batch_axes,
+    cache_axes,
+    opt_axes,
+    param_axes,
+    shard_act,
+    spec_for,
+    tree_shardings,
+    tree_specs,
+)
+
+__all__ = [
+    "batch_axes", "cache_axes", "opt_axes", "param_axes", "shard_act",
+    "spec_for", "tree_shardings", "tree_specs",
+    "compressed_psum_mean", "init_error", "quantize_roundtrip",
+    "pipeline_forward", "split_layers_into_stages",
+]

@@ -1,0 +1,112 @@
+"""GPipe-style pipeline parallelism over a `stage` mesh axis (DESIGN.md §5).
+
+``split_layers_into_stages`` reshapes a scanned layer stack (leading layer
+dim) into ``n_stages`` contiguous chunks; ``pipeline_forward`` runs the
+classic microbatched fill-drain schedule inside one ``shard_map``:
+
+  tick t: stage 0 injects microbatch t (while t < M), every stage applies
+  its chunk to whatever it holds, and a ``ppermute`` shifts activations one
+  stage rightward. After M + S - 1 ticks every microbatch has crossed all
+  S stages; the last stage accumulates outputs, which a masked psum
+  replicates outward.
+
+Ticks where a stage holds no live microbatch (pipeline bubbles) run the
+stage on zeros and the result is simply never collected.
+
+Each device holds only its own 1/S slice of the layer weights and carries
+one live microbatch activation through the loop; the (M, ...) microbatch
+input stack and output buffer, however, are replicated to every stage
+(in_specs P() / final psum), so per-device *buffer* memory is O(M). That
+is fine at the microbatch counts the schedule targets (M ~ a few x S); a
+streaming variant that feeds stage 0 only and gathers from the last stage
+would bring buffers to O(M/S) at the cost of a more complex collective
+pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def split_layers_into_stages(params: Any, n_stages: int) -> Any:
+    """Reshape each leaf's leading layer dim L -> (n_stages, L // n_stages).
+
+    The result is fed to :func:`pipeline_forward`, whose shard_map splits
+    the leading stage dim over the `stage` mesh axis."""
+    def split(a):
+        L = a.shape[0]
+        if L % n_stages != 0:
+            raise ValueError(
+                f"layer count {L} not divisible into {n_stages} stages"
+            )
+        return a.reshape((n_stages, L // n_stages) + a.shape[1:])
+
+    return jax.tree.map(split, params)
+
+
+def pipeline_forward(
+    fn: Callable[[Any, jax.Array], jax.Array],
+    stages: Any,
+    x: jax.Array,
+    mesh,
+    axis: str = "stage",
+) -> jax.Array:
+    """Run ``fn(stage_params, h)`` as an S-stage pipeline over microbatches.
+
+    ``stages``: pytree from :func:`split_layers_into_stages` (leading dim =
+    number of stages). ``x``: (M, microbatch..., ) stacked microbatch inputs.
+    ``fn`` must preserve the shape/dtype of its activation argument.
+    Returns the (M, ...) outputs, bit-matching the sequential schedule.
+    """
+    S = int(mesh.shape[axis])
+    lead = {int(leaf.shape[0]) for leaf in jax.tree.leaves(stages)}
+    if lead != {S}:
+        raise ValueError(
+            f"stage count {lead} != mesh axis {axis!r} size {S}"
+        )
+    M = x.shape[0]
+    n_ticks = M + S - 1
+
+    def per_stage(sp, xall):
+        sp = jax.tree.map(lambda a: a[0], sp)   # drop the sharded stage dim
+        idx = lax.axis_index(axis)
+        last = S - 1
+        state = jnp.zeros_like(xall[0])
+        buf = jnp.zeros_like(xall)
+
+        def tick(t, carry):
+            state, buf = carry
+            # stage 0 injects microbatch t; others consume last tick's recv
+            feed = lax.dynamic_index_in_dim(
+                xall, jnp.clip(t, 0, M - 1), 0, keepdims=False
+            )
+            h = jnp.where(idx == 0, feed, state)
+            out = fn(sp, h)
+            # the last stage finishes microbatch (t - last) on this tick
+            slot = t - last
+            collected = lax.dynamic_update_index_in_dim(
+                buf, out, jnp.clip(slot, 0, M - 1), 0
+            )
+            take = (idx == last) & (slot >= 0) & (slot < M)
+            buf = jnp.where(take, collected, buf)
+            # shift activations one stage rightward; stage 0 receives zeros
+            state = lax.ppermute(
+                out, axis, [(i, i + 1) for i in range(S - 1)]
+            )
+            return state, buf
+
+        _, buf = lax.fori_loop(0, n_ticks, tick, (state, buf))
+        # only the last stage holds real outputs -> masked psum replicates
+        buf = jnp.where(idx == last, buf, jnp.zeros_like(buf))
+        return lax.psum(buf, axis)
+
+    shmapped = jax.shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(P(axis), P()), out_specs=P(),
+        check_vma=False,
+    )
+    return shmapped(stages, x)

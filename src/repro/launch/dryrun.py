@@ -24,7 +24,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hlo import collective_bytes
@@ -76,7 +75,7 @@ def lower_lm_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
 
     pshapes = jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
-    paxes = param_axes(cfg)
+    paxes = param_axes(cfg, pshapes=pshapes)
     pshard = tree_shardings(paxes, pshapes, mesh)
     baxes = batch_axes(cfg, shape.kind)
     batch = input_specs(cfg, shape)

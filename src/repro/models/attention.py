@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.kernels.ref import attention_ref
 
 from .config import ModelConfig
 from .layers import apply_mrope, apply_rope, dense_init

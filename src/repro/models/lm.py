@@ -1,7 +1,7 @@
 """Task-level entry points: training loss, prefill, decode."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ precomputed merged embeddings (B,S,D) plus M-RoPE positions (B,S,3).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,6 @@ lowers at 512 devices.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,38 @@
+"""Auto-loaded when an interpreter starts with ``src`` on PYTHONPATH (the
+``site`` module imports ``sitecustomize`` at startup). Installs the jax
+backward-compat shims (see repro/_jaxcompat.py) before any user code runs,
+so scripts that touch ``jax.sharding.AxisType`` / ``jax.shard_map`` prior
+to importing repro — e.g. the subprocess bodies of the multi-device tests —
+work on the image's jax 0.4.37.
+
+Python only imports the *first* sitecustomize on sys.path, so after
+installing the shims this module chain-loads any sitecustomize it shadowed
+further down the path, preserving whatever the environment would have run
+without this file.
+"""
+import importlib.util
+import os
+import sys
+
+_SELF = os.path.realpath(__file__)
+
+try:
+    import repro._jaxcompat  # noqa: F401
+except ImportError:
+    # jax (or repro) not importable in this interpreter: nothing to shim.
+    # Anything else raising is a real breakage and should surface.
+    pass
+
+for _entry in sys.path:
+    _cand = os.path.join(_entry or ".", "sitecustomize.py")
+    # realpath comparison: a symlinked second spelling of this directory on
+    # sys.path must not make this file exec itself recursively
+    if not os.path.isfile(_cand) or os.path.realpath(_cand) == _SELF:
+        continue
+    _spec = importlib.util.spec_from_file_location(
+        "_shadowed_sitecustomize", _cand
+    )
+    if _spec is not None and _spec.loader is not None:
+        _mod = importlib.util.module_from_spec(_spec)
+        _spec.loader.exec_module(_mod)
+    break

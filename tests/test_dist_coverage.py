@@ -1,0 +1,128 @@
+"""Coverage the dry-run relies on: spec_for over every (arch x shape) cell
+lowered by launch/dryrun.py, and shard_act's no-op guarantee outside a mesh
+context."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, input_specs
+from repro.dist.sharding import (
+    batch_axes, cache_axes, opt_axes, param_axes, shard_act, spec_for,
+    tree_specs,
+)
+from repro.models import init_lm
+from repro.train.optimizer import adamw_init
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTIPOD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+DRYRUN_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def _mesh_dim_product(entry, mesh):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_axes_all_archs_full_size(arch, mesh):
+    """Every param leaf of every registered arch resolves to a spec whose
+    sharded dims divide evenly — the in_shardings the dry-run jits with."""
+    cfg = ARCHS[arch]
+    pshapes = jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
+    axes = param_axes(cfg)
+    specs = tree_specs(axes, pshapes, mesh)
+    flat_shapes = jax.tree.leaves(pshapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_specs) == len(flat_shapes)
+    for shape, spec in zip(flat_shapes, flat_specs):
+        for dim, entry in zip(shape.shape, tuple(spec)):
+            assert dim % _mesh_dim_product(entry, mesh) == 0
+
+    # optimizer state mirrors the params plus a replicated scalar step
+    oshapes = jax.eval_shape(lambda: adamw_init(pshapes))
+    ospecs = tree_specs(opt_axes(axes), oshapes, mesh)
+    assert len(jax.tree.leaves(ospecs, is_leaf=lambda x: isinstance(x, P))) \
+        == len(jax.tree.leaves(oshapes))
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+@pytest.mark.parametrize("shape_name", DRYRUN_SHAPES)
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_spec_for_all_dryrun_cells(arch, shape_name, mesh):
+    """batch_axes/cache_axes cover every input leaf of every dry-run cell,
+    and the resolved specs split each dim evenly."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, _ = cell_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("cell not applicable (long-context spec)")
+    batch = input_specs(cfg, shape)
+    baxes = batch_axes(cfg, shape.kind)
+    specs = tree_specs(baxes, batch, mesh)
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat) == len(jax.tree.leaves(batch))
+    for leaf, spec in zip(jax.tree.leaves(batch), flat):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            assert dim % _mesh_dim_product(entry, mesh) == 0
+
+    # the global batch must actually be data-sharded whenever it divides
+    if shape.kind != "decode" or not cfg.n_codebooks:
+        tok_spec = specs["embeds"] if cfg.family == "vlm" and \
+            shape.kind != "decode" else specs["tokens"]
+        B = shape.global_batch
+        dp = _mesh_dim_product(tuple(tok_spec)[0], mesh)
+        if B % np.prod([v for k, v in mesh.shape.items() if k != "model"]) == 0:
+            assert dp == np.prod(
+                [v for k, v in mesh.shape.items() if k != "model"]
+            )
+
+
+def test_cache_axes_match_cache_tree():
+    for arch in sorted(ARCHS):
+        cfg = ARCHS[arch]
+        from repro.models import make_cache
+
+        cshape = jax.eval_shape(lambda c=cfg: make_cache(c, 8, 128))
+        specs = tree_specs(cache_axes(cfg), cshape, POD)
+        assert len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))) \
+            == len(jax.tree.leaves(cshape))
+
+
+def test_shard_act_noop_outside_mesh():
+    """Model code calls shard_act unconditionally; with no ambient mesh it
+    must return its input unchanged, traced or eager."""
+    x = jnp.arange(24.0).reshape(2, 3, 4)
+    y = shard_act(x, "batch", "seq", "act_embed")
+    assert y is x  # identical object: literally a no-op
+    # and under jit tracing
+    f = jax.jit(lambda a: shard_act(a, "batch", "seq", "act_embed") * 2.0)
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x) * 2.0)
+
+
+def test_shard_act_applies_inside_mesh():
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jnp.arange(8.0).reshape(2, 4)
+    with jax.sharding.set_mesh(mesh):
+        y = shard_act(x, "batch", "none")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+
+
+def test_spec_for_rejects_rank_mismatch():
+    with pytest.raises(ValueError):
+        spec_for((4, 4), ("batch",), POD)
+    with pytest.raises(KeyError):
+        spec_for((4,), ("no-such-axis",), POD)

@@ -122,7 +122,7 @@ def test_uts_expand_matches_python_oracle():
 
 
 # --------------------------------------------------------------- moe_gmm
-from hypothesis import given, settings, strategies as st
+from _optional_hypothesis import given, settings, st
 
 from repro.kernels.moe_gmm import gmm
 
