@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
 from repro.kernels.uts_expand import uts_expand
 from repro.problems.uts import geom_thresholds
 
@@ -46,6 +47,23 @@ def run():
     want = ref.attention_ref(q[:, :256], k[:, :256], v[:, :256])
     rows.append(("attn_pallas_interp", 0.0,
                  f"err={float(jnp.abs(out-want).max()):.1e}"))
+
+    # flash decode (split-KV, interpret) vs the windowed oracle, plus the
+    # CPU-deployable masked-window jnp path's wall time
+    qd = jax.random.normal(ks[3], (4, 1, 8, 64), jnp.float32)
+    kc = jax.random.normal(ks[4], (4, 512, 2, 64), jnp.float32)
+    vc = jax.random.normal(ks[0], (4, 512, 2, 64), jnp.float32)
+    lens = jnp.asarray([512, 333, 64, 1], jnp.int32)
+    dec = flash_decode(qd, kc, vc, lens, block_k=128, interpret=True)
+    derr = 0.0
+    for i, L in enumerate(np.asarray(lens)):
+        want = ref.attention_ref(qd[i:i + 1], kc[i:i + 1, :L],
+                                 vc[i:i + 1, :L], causal=True)
+        derr = max(derr, float(jnp.abs(dec[i:i + 1] - want).max()))
+    rows.append(("flash_decode_interp", 0.0, f"err={derr:.1e}"))
+    f_dec = jax.jit(lambda q, k, v, l: ref.decode_ref(q, k, v, l))
+    us_dec = _timeit(f_dec, qd, kc, vc, lens)
+    rows.append(("decode_ref_b4_s512", us_dec, "impl=masked_jnp"))
 
     # ssd: sequential scan vs chunk-matmul form
     x = jax.random.normal(ks[3], (2, 512, 4, 64), jnp.float32)

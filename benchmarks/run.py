@@ -1,5 +1,7 @@
 """Benchmark orchestrator — one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV.
+``name,us_per_call,derived`` CSV; with ``--json`` also writes
+``BENCH_<suite>.json`` next to the CSV so the perf trajectory is
+machine-readable (CI uploads the kernels suite per PR).
 
   bench_uts              — Fig 2/3/4: UTS-G scaling + efficiency
   bench_bc               — Fig 5/7/9: BC-G vs static scaling
@@ -7,7 +9,11 @@
   bench_params           — §2.4: w/z/n tuning space
   bench_kernels          — Pallas kernels vs oracles + CPU timings
   bench_moe_glb          — GLB applied to MoE expert placement
+  bench_serve            — engine decode loop: tokens/s + host syncs/token
+
+Usage: python benchmarks/run.py [suite-substring] [--json]
 """
+import json
 import sys
 import time
 import traceback
@@ -16,7 +22,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_bc, bench_bc_distribution, bench_kernels, bench_moe_glb,
-        bench_params, bench_uts,
+        bench_params, bench_serve, bench_uts,
     )
 
     modules = [
@@ -26,21 +32,41 @@ def main() -> None:
         ("glb_params", bench_params),
         ("kernels", bench_kernels),
         ("moe_glb", bench_moe_glb),
+        ("serve", bench_serve),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = sys.argv[1:]
+    as_json = "--json" in argv
+    argv = [a for a in argv if a != "--json"]
+    only = argv[0] if argv else None
+    failed = []
     print("name,us_per_call,derived")
     for name, mod in modules:
         if only and only not in name:
             continue
         t0 = time.time()
+        rows = []
         try:
             for row in mod.run():
                 n, us, derived = row
+                rows.append({"name": n, "us_per_call": float(us),
+                             "derived": str(derived)})
                 print(f"{n},{us:.1f},{derived}", flush=True)
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             print(f"{name},nan,ERROR", flush=True)
+            rows.append({"name": name, "us_per_call": None,
+                         "derived": "ERROR"})
+            failed.append(name)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        if as_json:
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump({"suite": name, "rows": rows}, f, indent=2)
+            print(f"# wrote {path}", flush=True)
+    if failed:
+        # A crashing suite must fail CI, not just leave an ERROR row in
+        # the artifact.
+        sys.exit(f"benchmark suites errored: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

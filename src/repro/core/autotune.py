@@ -25,6 +25,30 @@ class TuneResult(NamedTuple):
     table: list  # (params, supersteps, idle_frac)
 
 
+# ------------------------------------------------------- kernel block table
+# Split-KV flash-decode block sizes, keyed by head_dim: how many KV cache
+# rows one grid step streams through VMEM. The working set per step is
+# ~2 * block_k * head_dim * 4B (k + v tiles, double-buffered by the
+# pipeline), so wider heads take smaller blocks to stay well inside the
+# ~16 MB VMEM budget; all entries are 128-multiples for MXU lane alignment.
+DECODE_BLOCK_K = {32: 512, 64: 512, 128: 256, 256: 128}
+
+
+def decode_block_k(kv_len: int, head_dim: int) -> int:
+    """KV block size for kernels.flash_decode: table lookup by head_dim
+    with a halving fallback so the block always divides the (bucketed)
+    cache length."""
+    bk = min(DECODE_BLOCK_K.values())
+    for hd in sorted(DECODE_BLOCK_K):
+        if head_dim <= hd:
+            bk = DECODE_BLOCK_K[hd]
+            break
+    bk = max(1, min(bk, kv_len))
+    while kv_len % bk:
+        bk //= 2
+    return max(bk, 1)
+
+
 def autotune(
     problem: GLBProblem,
     P: int,

@@ -4,7 +4,11 @@ pure-jnp oracle in ref.py and a dispatching wrapper in ops.py:
   uts_expand.py      — the paper's UTS hot loop: batched node hashing +
                        geometric child counts (VPU integer mixing)
   flash_attention.py — causal GQA flash attention (online softmax, VMEM
-                       scratch across the sequential kv grid dim)
+                       scratch across the sequential kv grid dim, causal
+                       block skip)
+  flash_decode.py    — split-KV Sq==1 decode against a padded KV cache
+                       (per-slot length masking, idle-slot/tail block
+                       skip; the serving hot path)
   mamba2_ssd.py      — Mamba2 SSD chunk scan (matmul-form intra-chunk +
                        carried (N,P) state)
 

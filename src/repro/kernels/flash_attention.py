@@ -36,12 +36,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     i = pl.program_id(2)
-    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
-        + (skv - sq)
-    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    needed = (not causal) or True  # block-level skip below via pl.when
 
     def _body():
+        qpos = i * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        ) + (skv - sq)
+        kpos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
         q = q_ref[0, :, 0, :].astype(jnp.float32)           # (Bq, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)           # (Bk, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)           # (Bk, D)
@@ -68,7 +70,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         l_ref[...] = l_new[:, None]
 
     if causal:
-        # Skip blocks strictly above the diagonal.
+        # Block-level causal skip: a kv block whose first key position lies
+        # strictly beyond this q block's last query is fully masked, so it
+        # contributes nothing — pl.when drops its matmuls/iota entirely
+        # (~2x fewer FLOPs on square causal prefill).
         q_max = i * block_q + block_q - 1 + (skv - sq)
         k_min = j * block_k
         pl.when(q_max >= k_min)(_body)

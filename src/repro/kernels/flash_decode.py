@@ -1,0 +1,146 @@
+"""Split-KV Pallas flash-decode kernel: one query token against a padded
+KV cache, specialized for the serving hot path (Sq == 1).
+
+The prefill kernel (flash_attention.py) tiles queries and keys; at decode
+there is exactly one query row per (batch, head), so the grid becomes
+(batch, q_heads, kv_blocks) with the KV dimension innermost — TPU grids
+execute sequentially, so the online-softmax partials (running max m,
+denominator l, weighted accumulator acc) live in VMEM scratch across KV
+steps and the (1, D) output tile is written once on the last step.
+
+Per-slot cache lengths arrive as a scalar-prefetch operand
+(PrefetchScalarGridSpec), so they gate the kernel at three levels:
+  * DMA clamp   — the k/v index maps clamp past-window block indices to
+    the slot's last live block; the pipeline sees an unchanged index and
+    issues no new fetch, so a 70-token slot in a 4096-row bucket streams
+    ~1/64th of the cache from HBM instead of all of it;
+  * block skip  — ``pl.when`` drops the matmuls/softmax update for blocks
+    at or past the window (idle slots, window == 0, skip every block and
+    emit zeros);
+  * lane mask   — the partial tail block masks key positions >= window
+    before the softmax.
+
+GQA rides on the kv-head index map (h // group), same as the prefill
+kernel. Oracle: ref.attention_ref on the visible window (ref.decode_ref is
+the padded-cache form). Validated in interpret mode on CPU; block sizes
+for TPU come from core.autotune.DECODE_BLOCK_K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale, block_k, num_kv):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    n = len_ref[b]  # visible KV entries for this slot; 0 => idle
+
+    @pl.when(j * block_k < n)  # skip past-window blocks and idle slots
+    def _body():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32)[None, :]      # (1, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)               # (Bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)               # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                               # (1, Bk)
+        kpos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1
+        )
+        live = kpos < n
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]                                     # (1, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(live, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                         # (1, 1)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+
+    @pl.when(j == num_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # idle slot: acc == 0 -> output 0
+        o_ref[0, 0, 0, :] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret")
+)
+def flash_decode(q, k, v, lengths, *, scale: float | None = None,
+                 block_k: int | None = None, interpret: bool = False):
+    """q: (B, 1, Hq, D); k, v: (B, S, Hkv, D); lengths: (B,) i32 visible
+    window per slot (0 => idle slot, output zeros). Returns (B, 1, Hq, D).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, Sq, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    assert Sq == 1, f"flash_decode is Sq==1 only, got {Sq}"
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(D)
+    if block_k is None:
+        from repro.core.autotune import decode_block_k
+
+        block_k = decode_block_k(S, D)
+    bk = max(1, min(block_k, S))
+    while S % bk:  # cache buckets are powers of two; keep the grid exact
+        bk //= 2
+    num_kv = S // bk
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    def kv_map(b, h, j, lens):
+        # Clamp past-window blocks to the slot's last live block: the
+        # pipeline skips the DMA for a repeated index, and pl.when skips
+        # the compute, so dead cache rows are neither fetched nor read.
+        last = jnp.maximum(lens[b] - 1, 0) // bk
+        return (b, jnp.minimum(j, last), h // group, 0)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=bk, num_kv=num_kv
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, lens: (b, 0, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), kv_map),
+            pl.BlockSpec((1, bk, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, D), lambda b, h, j, lens: (b, 0, h, 0)
+        ),
+        # VMEM scratch carried across the sequential kv grid dimension.
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((1, 1), jnp.float32),   # running max
+            pltpu.VMEM((1, 1), jnp.float32),   # running denominator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lens, q, k, v)

@@ -9,6 +9,7 @@ import jax
 
 from . import ref
 from .flash_attention import flash_attention
+from .flash_decode import flash_decode
 from .mamba2_ssd import ssd_chunked
 from .moe_gmm import gmm as gmm_pallas
 from .uts_expand import uts_expand
@@ -19,10 +20,40 @@ def _on_tpu() -> bool:
 
 
 def attention(q, k, v, *, causal=True, scale=None, impl: str = "auto",
-              block_q: int = 128, block_k: int = 128):
-    """impl: auto | pallas | pallas_interpret | ref | chunked"""
-    if impl == "auto":
+              block_q: int = 128, block_k: int = 128, lengths=None):
+    """impl: auto | pallas | pallas_interpret | ref | chunked
+          | decode | decode_interpret | decode_ref
+
+    `lengths` ((B,) i32 visible-window sizes against a padded KV cache)
+    plus Sq == 1 selects the split-KV flash-decode fast path: `auto`
+    routes such calls to the decode kernel on TPU and the masked-window
+    oracle elsewhere; the decode_* impls force one arm.
+    """
+    if lengths is not None and q.shape[1] != 1:
+        raise ValueError(
+            f"lengths is only supported for Sq == 1 decode, got Sq="
+            f"{q.shape[1]}; dropping the window mask would silently "
+            "attend to dead cache rows"
+        )
+    is_decode = lengths is not None
+    if is_decode:
+        # Normalize the prefill impl names so one config knob drives both
+        # paths: the window mask must never be dropped once lengths are in.
+        impl = {
+            "auto": "decode" if _on_tpu() else "decode_ref",
+            "pallas": "decode",
+            "pallas_interpret": "decode_interpret",
+            "ref": "decode_ref",
+            "chunked": "decode_ref",
+        }.get(impl, impl)
+    elif impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
+    if impl in ("decode", "decode_interpret", "decode_ref"):
+        assert is_decode, "decode impls need Sq == 1 and lengths"
+        if impl == "decode_ref":
+            return ref.decode_ref(q, k, v, lengths, scale=scale)
+        return flash_decode(q, k, v, lengths, scale=scale,
+                            interpret=(impl == "decode_interpret"))
     if impl == "ref":
         return ref.attention_ref(q, k, v, causal=causal, scale=scale)
     if impl == "chunked":

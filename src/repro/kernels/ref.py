@@ -48,6 +48,28 @@ def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
     return out.astype(q.dtype)
 
 
+def decode_ref(q, k, v, lengths, scale: float | None = None):
+    """Sq==1 attention against a padded KV cache (the flash_decode oracle):
+    mask = kpos < length, so row b matches attention_ref on k[b, :length].
+    Rows with length == 0 are idle serving slots — the fully-masked softmax
+    degenerates to uniform probs and callers ignore the output.
+
+    q (B,1,Hq,hd); k, v (B,S,Hkv,hd); lengths (B,) i32. f32 softmax."""
+    B, S, Hkv, hd = k.shape
+    Hq = q.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, hd)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bgqd,bsgd->bgqs", qf, kf) * scale        # (B,Hkv,grp,S)
+    mask = jnp.arange(S)[None, :] < lens[:, None]            # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqs,bsgd->bgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
 def attention_chunked(q, k, v, causal: bool = True, scale: float | None = None,
                       block_q: int = 512):
     """Memory-bounded attention: lax.map over q blocks, full kv per block

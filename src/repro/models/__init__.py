@@ -2,10 +2,10 @@
 Mamba2/SSD, Zamba2-hybrid, VLM/audio backbone stubs)."""
 from .config import ModelConfig, ShapeConfig, SHAPES
 from .transformer import init_lm, forward, make_cache
-from .lm import train_loss, prefill, decode_step
+from .lm import train_loss, prefill, decode_step, sample_tokens
 
 __all__ = [
     "ModelConfig", "ShapeConfig", "SHAPES",
     "init_lm", "forward", "make_cache",
-    "train_loss", "prefill", "decode_step",
+    "train_loss", "prefill", "decode_step", "sample_tokens",
 ]

@@ -2,7 +2,9 @@
 
 Prefill and train use the flash kernel on TPU (chunked-jnp oracle
 elsewhere); decode attends one token against a (possibly sequence-sharded)
-KV cache with explicit length masking.
+KV cache, passing per-slot cache lengths through to the split-KV
+flash-decode kernel (ops.attention with `lengths`; masked-window oracle
+off-TPU) instead of materializing a dense mask.
 """
 from __future__ import annotations
 
@@ -37,23 +39,6 @@ def _rope(cfg: ModelConfig, x, positions):
     if cfg.mrope:
         return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
     return apply_rope(x, positions, cfg.rope_theta)
-
-
-def _masked_decode_attention(q, k, v, kv_len):
-    """One-token attention against a padded cache, mask = kpos < kv_len.
-    q (B,1,Hq,hd); k,v (B,S,Hkv,hd); kv_len (B,) i32. f32 softmax."""
-    B, S, Hkv, hd = k.shape
-    Hq = q.shape[2]
-    group = Hq // Hkv
-    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
-    qf = q.astype(jnp.float32).reshape(B, Hkv, group, hd)
-    kf = k.astype(jnp.float32)
-    s = jnp.einsum("bgqd,bsgd->bgqs", qf, kf) * scale        # (B,Hkv,grp,S)
-    mask = jnp.arange(S)[None, :] < kv_len[:, None]          # (B, S)
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bgqs,bsgd->bgqd", p, v.astype(jnp.float32))
-    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
 
 
 def attn_fwd(
@@ -99,8 +84,14 @@ def attn_fwd(
         cv = cache["v"].at[brow, widx].set(
             v[:, 0].astype(cache["v"].dtype), mode="drop"
         )
-        o = _masked_decode_attention(q, ck.astype(dt), cv.astype(dt),
-                                     jnp.maximum(lens, 0) + 1)
+        # Cache lengths flow through as-is (no dense mask materialized
+        # here): visible window = cache_len entries + the token just
+        # written; idle slots (-1) get an empty window and a dead output.
+        window = jnp.where(lens >= 0, lens + 1, 0)
+        o = ops.attention(
+            q, ck.astype(dt), cv.astype(dt), causal=False,
+            impl=cfg.decode_impl, lengths=window,
+        ).astype(dt)
         new_cache = {"k": ck, "v": cv}
     else:
         import os

@@ -39,7 +39,8 @@ class ModelConfig:
     # --- numerics / perf knobs
     dtype: str = "bfloat16"     # compute/activation dtype
     remat: str = "full"         # none | dots | full
-    attn_impl: str = "auto"     # kernels.ops.attention impl
+    attn_impl: str = "auto"     # kernels.ops.attention impl (prefill/train)
+    decode_impl: str = "auto"   # Sq==1 cached-decode impl (flash_decode)
     scan_layers: bool = True    # lax.scan over stacked layer params
     moe_impl: str = "auto"      # auto | global | ep (shard_map EP dispatch)
 

@@ -73,3 +73,16 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, cache_len):
         mode="decode",
     )
     return logits, cache
+
+
+def sample_tokens(logits, key, temperature: float = 0.0):
+    """On-device sampling over already-vocab-sliced logits (..., V):
+    greedy argmax at temperature 0, else categorical at logits/T. The
+    temperature is a trace-time constant, so jitted callers bake the
+    branch in. Returns i32 token ids shaped like logits[..., 0]."""
+    lg = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lg / temperature, axis=-1).astype(
+        jnp.int32
+    )

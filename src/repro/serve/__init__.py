@@ -1,1 +1,4 @@
-"""Serving substrate: continuous-batching engine + GLB replica balancer."""
+"""Serving substrate: continuous-batching engine (jitted fori_loop
+multi-token decode steps, on-device sampling, split-KV flash-decode
+attention) + GLB replica balancer."""
+from .engine import Engine, GLBReplicaBalancer, Request  # noqa: F401

@@ -2,13 +2,23 @@
 balancing across replicas.
 
 Each replica owns a fixed pool of decode slots (static shapes). New
-requests prefill into a free slot (prompts padded to a bucket length); all
-active slots advance one token per engine step in a single batched decode
-with per-slot cache lengths (-1 marks an idle slot: its cache/state is
-untouched). The multi-replica balancer treats per-replica queue depth as
-the GLB size vector and moves queued requests from overloaded to idle
-replicas with the same deterministic matching the task scheduler uses —
-the paper's library applied to serving (DESIGN.md §4).
+requests prefill into a free slot (prompts padded to a bucket length,
+KV/conv state written into a reused preallocated row cache — no
+``make_cache`` allocation churn per admission); all active slots advance
+``steps_per_sync`` tokens per engine step inside ONE jitted
+``lax.fori_loop`` decode: sampling (greedy or temperature, device-side
+PRNG key threading) happens on device, per-slot done masks gate cache
+writes and length/budget accounting, and each step emits an
+(N, slots) token buffer the host drains with a single device->host sync —
+~N× fewer host round-trips than the per-token loop (kept as
+``step_legacy`` for benchmarking). Per-slot cache lengths (-1 marks an
+idle slot: its cache/state is untouched) flow through to the split-KV
+flash-decode kernel.
+
+The multi-replica balancer treats per-replica queue depth as the GLB size
+vector and moves queued requests from overloaded to idle replicas with the
+same deterministic matching the task scheduler uses — the paper's library
+applied to serving (DESIGN.md §4/§6).
 """
 from __future__ import annotations
 
@@ -21,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import GLBParams, lifeline_buddies, match_steals
-from repro.models import decode_step, forward, make_cache
+from repro.models import decode_step, forward, make_cache, sample_tokens
 from repro.models.config import ModelConfig
 
 
@@ -34,45 +44,102 @@ class Request:
     done: bool = False
 
 
-def _make_fns(cfg: ModelConfig, max_seq: int, pad_len: int):
+def _make_fns(cfg: ModelConfig, max_seq: int, pad_len: int,
+              steps_per_sync: int, temperature: float):
+    vocab = cfg.vocab
+
+    def _scrub_row(row):
+        # The reused row cache carries the previous request's state.
+        # Attention k/v tails are harmless (masked by cache length), but
+        # recurrent conv/ssm state feeds prefill directly and must be zero.
+        return {
+            name: (leaf if name in ("k", "v") else jnp.zeros_like(leaf))
+            for name, leaf in row.items()
+        }
+
     @jax.jit
-    def prefill_into_slot(params, tokens, cache, slot):
-        row = make_cache(cfg, 1, max_seq, dtype=jnp.float32)
+    def prefill_into_slot(params, tokens, cache, slot, row, true_len, key):
         logits, row, _ = forward(
-            params, cfg, tokens=tokens, cache=row,
+            params, cfg, tokens=tokens, cache=_scrub_row(row),
             cache_len=jnp.int32(0), mode="prefill",
         )
         def put(c, r):
             start = (0, slot) + (0,) * (c.ndim - 2)
             return jax.lax.dynamic_update_slice(c, r.astype(c.dtype), start)
         cache = jax.tree.map(put, cache, row)
-        return logits[0, :, ..., : cfg.vocab], cache
+        first = sample_tokens(
+            logits[0, true_len - 1, ..., :vocab], key, temperature
+        )
+        return first, cache, row
 
     @jax.jit
-    def decode(params, tokens, cache, lens):
+    def decode_tokens(params, tokens, cache, lens, budget, key):
+        """steps_per_sync decode steps entirely on device. Carries per-slot
+        done masks (idle: lens < 0; finished: budget == 0) and fills an
+        (N, slots) token buffer (-1 where a slot emitted nothing) that the
+        host drains with one sync."""
+        B = tokens.shape[0]
+        buf = jnp.full((steps_per_sync, B), -1, jnp.int32)
+
+        def body(t, carry):
+            tokens, cache, lens, budget, key, buf = carry
+            active = (lens >= 0) & (budget > 0)
+            step_lens = jnp.where(active, lens, -1)
+            logits, cache = decode_step(params, cfg, tokens, cache,
+                                        step_lens)
+            key, sub = jax.random.split(key)
+            nxt = sample_tokens(logits[:, 0, ..., :vocab], sub, temperature)
+            nxt = jnp.where(active, nxt, -1)
+            buf = buf.at[t].set(nxt)
+            lens = jnp.where(active, lens + 1, lens)
+            budget = jnp.where(active, budget - 1, budget)
+            budget = jnp.where(lens >= max_seq - 1, 0, budget)  # cache full
+            tokens = jnp.where(active[:, None], nxt[:, None], tokens)
+            return tokens, cache, lens, budget, key, buf
+
+        carry = (tokens, cache, lens, budget, key, buf)
+        tokens, cache, lens, budget, key, buf = jax.lax.fori_loop(
+            0, steps_per_sync, body, carry
+        )
+        return buf, cache, key
+
+    @jax.jit
+    def decode_one(params, tokens, cache, lens):
+        # Pre-fast-path decode: one step, greedy, logits -> host argmax is
+        # the caller's job historically; argmax stays on device here but
+        # the loop still syncs every token (step_legacy baseline).
         logits, cache = decode_step(params, cfg, tokens, cache, lens)
-        nxt = jnp.argmax(logits[:, 0, ..., : cfg.vocab], axis=-1)
+        nxt = jnp.argmax(logits[:, 0, ..., :vocab], axis=-1)
         return nxt.astype(jnp.int32), cache
 
-    return prefill_into_slot, decode
+    return prefill_into_slot, decode_tokens, decode_one
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
-                 max_seq: int = 256, pad_len: int = 32):
+                 max_seq: int = 256, pad_len: int = 32,
+                 steps_per_sync: int = 8, temperature: float = 0.0,
+                 seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.pad_len = pad_len
+        self.steps_per_sync = steps_per_sync
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
-        self.lens = np.full(max_slots, -1, np.int32)   # -1 => idle slot
+        self.lens = np.full(max_slots, -1, np.int32)    # -1 => idle slot
+        self.budget = np.zeros(max_slots, np.int32)     # tokens still owed
         self.cache = make_cache(cfg, max_slots, max_seq, dtype=jnp.float32)
+        self._row = make_cache(cfg, 1, max_seq, dtype=jnp.float32)
         self.tokens = np.zeros((max_slots, 1), np.int32)
-        self._prefill, self._decode = _make_fns(cfg, max_seq, pad_len)
+        self._key = jax.random.key(seed)
+        self._prefill, self._decode_n, self._decode_1 = _make_fns(
+            cfg, max_seq, pad_len, steps_per_sync, temperature
+        )
         self.steps = 0
         self.tokens_out = 0
+        self.host_syncs = 0    # blocking device->host transfer points
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -88,27 +155,69 @@ class Engine:
                 true_len = min(len(req.prompt), self.pad_len)
                 toks = np.zeros((1, self.pad_len), np.int32)
                 toks[0, :true_len] = req.prompt[:true_len]
-                logits, self.cache = self._prefill(
-                    self.params, jnp.asarray(toks), self.cache, i
+                self._key, sub = jax.random.split(self._key)
+                first, self.cache, self._row = self._prefill(
+                    self.params, jnp.asarray(toks), self.cache, i,
+                    self._row, true_len, sub,
                 )
-                first = int(np.asarray(logits)[true_len - 1].argmax())
+                first = int(first)          # one sync per admission
+                self.host_syncs += 1
                 req.out.append(first)
                 self.slots[i] = req
                 self.lens[i] = true_len
+                self.budget[i] = req.max_new
                 self.tokens[i, 0] = first
                 self.tokens_out += 1
 
+    def _finish_check(self, i: int, req: Request):
+        if (len(req.out) > req.max_new
+                or self.lens[i] >= self.max_seq - 1
+                or self.budget[i] <= 0):
+            req.done = True
+            self.slots[i] = None
+            self.lens[i] = -1
+            self.budget[i] = 0
+
     def step(self):
-        """One engine iteration: admit, then ONE batched decode for all
-        active slots (idle slots carry lens=-1 and stay untouched)."""
+        """One engine iteration: admit, then `steps_per_sync` batched
+        decode steps on device with ONE host drain at the end (idle slots
+        carry lens=-1 and stay untouched)."""
         self._admit()
         if all(s is None for s in self.slots):
             return
-        nxt, self.cache = self._decode(
+        buf, self.cache, self._key = self._decode_n(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.lens), jnp.asarray(self.budget), self._key,
+        )
+        buf = np.asarray(buf)               # the single drain
+        self.host_syncs += 1
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            toks = buf[:, i]
+            toks = toks[toks >= 0]
+            req.out.extend(int(t) for t in toks)
+            n = len(toks)
+            if n:
+                self.tokens[i, 0] = toks[-1]
+            self.lens[i] += n
+            self.budget[i] -= n
+            self.tokens_out += n
+            self._finish_check(i, req)
+        self.steps += 1
+
+    def step_legacy(self):
+        """The pre-fast-path loop: ONE decode step and one host round-trip
+        per token. Kept as the bench_serve / equivalence baseline."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return
+        nxt, self.cache = self._decode_1(
             self.params, jnp.asarray(self.tokens), self.cache,
             jnp.asarray(self.lens),
         )
         nxt = np.asarray(nxt)
+        self.host_syncs += 1
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -116,12 +225,9 @@ class Engine:
             req.out.append(tok)
             self.tokens[i, 0] = tok
             self.lens[i] += 1
+            self.budget[i] -= 1
             self.tokens_out += 1
-            if (len(req.out) > req.max_new
-                    or self.lens[i] >= self.max_seq - 1):
-                req.done = True
-                self.slots[i] = None
-                self.lens[i] = -1
+            self._finish_check(i, req)
         self.steps += 1
 
 

@@ -1,0 +1,118 @@
+"""Decode alignment contract: the split-KV flash-decode kernel (interpret
+mode) and the masked-window oracle must match ref.attention_ref on the
+visible window for Sq == 1, across cache lengths (0, block/bucket
+boundaries, full cache) and head layouts (MHA and GQA)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import flash_decode
+
+KEY = jax.random.key(7)
+S_MAX = 256
+BLOCK = 64
+
+
+def _qkv(B, Hq, Hkv, D, dtype=jnp.float32, salt=0):
+    ks = jax.random.split(jax.random.fold_in(KEY, salt), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S_MAX, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S_MAX, Hkv, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2)])  # MHA, GQA
+@pytest.mark.parametrize(
+    "cache_len",
+    [0, 1, 62, 63, 64, 127, 128, 255],  # 0, block edges, bucket edges, full
+)
+def test_flash_decode_matches_ref_window(Hq, Hkv, cache_len):
+    """window = cache_len existing entries + the freshly written token."""
+    B, D = 2, 32
+    q, k, v = _qkv(B, Hq, Hkv, D, salt=cache_len)
+    window = cache_len + 1
+    out = flash_decode(q, k, v, jnp.full((B,), window, jnp.int32),
+                       block_k=BLOCK, interpret=True)
+    want = ref.attention_ref(q, k[:, :window], v[:, :window], causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_flash_decode_mixed_lengths_per_slot():
+    q, k, v = _qkv(4, 8, 2, 64, salt=101)
+    lens = [1, 64, 97, 256]
+    out = flash_decode(q, k, v, jnp.asarray(lens, jnp.int32),
+                       block_k=BLOCK, interpret=True)
+    for i, L in enumerate(lens):
+        want = ref.attention_ref(q[i:i + 1], k[i:i + 1, :L], v[i:i + 1, :L],
+                                 causal=True)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                   np.asarray(want), atol=2e-6, rtol=2e-6)
+
+
+def test_flash_decode_idle_slots_emit_zeros():
+    """window == 0 marks an idle serving slot: every KV block is skipped
+    and the kernel writes exact zeros."""
+    q, k, v = _qkv(3, 4, 4, 32, salt=5)
+    out = flash_decode(q, k, v, jnp.asarray([0, 5, 0], jnp.int32),
+                       block_k=BLOCK, interpret=True)
+    assert float(jnp.abs(out[0]).max()) == 0.0
+    assert float(jnp.abs(out[2]).max()) == 0.0
+    assert float(jnp.abs(out[1]).max()) > 0.0
+
+
+def test_flash_decode_bf16():
+    q, k, v = _qkv(2, 8, 2, 64, dtype=jnp.bfloat16, salt=9)
+    lens = jnp.asarray([100, 256], jnp.int32)
+    out = flash_decode(q, k, v, lens, block_k=BLOCK, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    for i, L in enumerate([100, 256]):
+        want = ref.attention_ref(q[i:i + 1], k[i:i + 1, :L], v[i:i + 1, :L],
+                                 causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out[i:i + 1], np.float32),
+            np.asarray(want, np.float32), atol=2e-2, rtol=2e-2,
+        )
+
+
+def test_decode_ref_oracle_matches_window():
+    """The padded-cache jnp oracle (what CPU serving runs) equals
+    attention_ref on the visible slice."""
+    q, k, v = _qkv(3, 8, 2, 32, salt=13)
+    lens = [7, 130, 256]
+    out = ref.decode_ref(q, k, v, jnp.asarray(lens, jnp.int32))
+    for i, L in enumerate(lens):
+        want = ref.attention_ref(q[i:i + 1], k[i:i + 1, :L], v[i:i + 1, :L],
+                                 causal=True)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                   np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_ops_attention_routes_decode_impls():
+    """ops.attention with Sq==1 + lengths: every impl spelling lands on a
+    window-masked path (kernel or oracle), and they agree."""
+    q, k, v = _qkv(2, 4, 2, 32, salt=21)
+    lens = jnp.asarray([33, 200], jnp.int32)
+    o_kernel = ops.attention(q, k, v, causal=False, lengths=lens,
+                             impl="decode_interpret")
+    o_ref = ops.attention(q, k, v, causal=False, lengths=lens,
+                          impl="decode_ref")
+    o_auto = ops.attention(q, k, v, causal=False, lengths=lens, impl="auto")
+    o_norm = ops.attention(q, k, v, causal=False, lengths=lens, impl="ref")
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_array_equal(np.asarray(o_auto), np.asarray(o_ref))
+    np.testing.assert_array_equal(np.asarray(o_norm), np.asarray(o_ref))
+
+
+def test_decode_block_k_table():
+    from repro.core.autotune import decode_block_k
+
+    assert decode_block_k(4096, 64) == 512
+    assert decode_block_k(4096, 128) == 256
+    assert decode_block_k(4096, 256) == 128
+    assert decode_block_k(64, 64) == 64      # clamped to the cache bucket
+    bk = decode_block_k(96, 64)              # non-power-of-two bucket
+    assert 96 % bk == 0

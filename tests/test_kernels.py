@@ -41,6 +41,21 @@ def test_flash_attention_matches_ref(B, Sq, Skv, Hq, Hkv, D, dtype):
     )
 
 
+def test_flash_attention_causal_block_skip_equality():
+    """Square causal prefill where nearly half the kv blocks lie strictly
+    above the diagonal: the pl.when block skip must drop them without
+    changing the result (oracle equality in interpret mode)."""
+    ks = jax.random.split(jax.random.fold_in(KEY, 777), 3)
+    q = jax.random.normal(ks[0], (1, 512, 2, 32))
+    k = jax.random.normal(ks[1], (1, 512, 2, 32))
+    v = jax.random.normal(ks[2], (1, 512, 2, 32))
+    out = flash_attention(q, k, v, causal=True, interpret=True,
+                          block_q=64, block_k=64)  # 28/64 blocks skipped
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_flash_attention_non_causal():
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (1, 128, 2, 32))
