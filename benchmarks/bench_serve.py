@@ -1,6 +1,8 @@
 """Serving engine throughput: tokens/s and host syncs per token for the
 legacy per-token decode loop vs the jitted multi-step ``lax.fori_loop``
-engine (on-device sampling, one host drain per N positions).
+engine (on-device sampling, one host drain per N positions), plus the
+paged KV pool vs contiguous slots — same-workload tokens/s and max
+concurrent sequences at fixed cache memory (the paged packing win).
 
 Steady-state measurement: all slots admitted and kernels compiled before
 the timer starts, so the numbers isolate the engine decode loop itself.
@@ -20,6 +22,10 @@ from repro.serve.engine import Engine, Request
 
 STEPS_PER_SYNC = 16
 MAX_NEW = 96
+MAX_SEQ = 128
+SLOTS = 4
+PAGED_BS = 8                      # pool block size (tokens)
+SHORT_MAX_NEW = 16                # packing workload: short requests
 
 
 def _bench_cfg():
@@ -43,17 +49,76 @@ def _drive(engine, step_fn):
     return toks / dt, (engine.host_syncs - syncs0) / max(toks, 1)
 
 
+def _best_of(make_engine, drive, repeats=2):
+    """Best tokens/s over fresh runs — engine-vs-engine ratios on a noisy
+    shared CPU need the envelope, not one sample."""
+    best = None
+    for _ in range(repeats):
+        out = drive(make_engine())
+        if best is None or out[0] > best[0]:
+            best = out
+    return best
+
+
+def _drive_packing(engine, n_reqs):
+    """Flood with short requests; measure steady throughput and the peak
+    number of concurrently-running sequences."""
+    for r in range(n_reqs):
+        engine.submit(Request(rid=r, prompt=[3, r % 250 + 1, 4],
+                              max_new=SHORT_MAX_NEW))
+    engine.step()  # compile + first admissions
+    toks0 = engine.tokens_out
+    t0 = time.time()
+    while engine.load > 0:
+        engine.step()
+    dt = time.time() - t0
+    return (engine.tokens_out - toks0) / dt, engine.peak_running
+
+
 def run():
     cfg = _bench_cfg()
     params = init_lm(jax.random.key(0), cfg)
 
-    old = Engine(cfg, params, max_slots=4, max_seq=128, pad_len=8,
-                 steps_per_sync=1)
-    tps_old, spt_old = _drive(old, old.step_legacy)
+    tps_old, spt_old = _best_of(
+        lambda: Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ,
+                       pad_len=8, steps_per_sync=1),
+        lambda e: _drive(e, e.step_legacy),
+    )
 
-    new = Engine(cfg, params, max_slots=4, max_seq=128, pad_len=8,
-                 steps_per_sync=STEPS_PER_SYNC)
-    tps_new, spt_new = _drive(new, new.step)
+    tps_new, spt_new = _best_of(
+        lambda: Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ,
+                       pad_len=8, steps_per_sync=STEPS_PER_SYNC),
+        lambda e: _drive(e, e.step),
+    )
+
+    # Paged pool, same workload and same KV rows as the contiguous engine:
+    # tokens/s should track the contiguous fast path (the pool adds a
+    # block-table walk, not extra attention work).
+    rows = SLOTS * MAX_SEQ
+    tps_pg, spt_pg = _best_of(
+        lambda: Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ,
+                       pad_len=8, steps_per_sync=STEPS_PER_SYNC,
+                       paged=True, block_size=PAGED_BS,
+                       num_blocks=rows // PAGED_BS),
+        lambda e: _drive(e, e.step),
+    )
+
+    # Packing at fixed HBM: the contiguous engine reserves max_seq rows
+    # per slot, so `rows` of cache memory cap it at SLOTS concurrent
+    # sequences; the paged engine packs by actual length.
+    n_reqs = 3 * rows // (PAGED_BS + SHORT_MAX_NEW)
+    tps_pc, conc_c = _best_of(
+        lambda: Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ,
+                       pad_len=8, steps_per_sync=STEPS_PER_SYNC),
+        lambda e: _drive_packing(e, n_reqs),
+    )
+    tps_pp, conc_p = _best_of(
+        lambda: Engine(cfg, params, max_slots=rows // PAGED_BS,
+                       max_seq=MAX_SEQ, pad_len=8,
+                       steps_per_sync=STEPS_PER_SYNC, paged=True,
+                       block_size=PAGED_BS, num_blocks=rows // PAGED_BS),
+        lambda e: _drive_packing(e, n_reqs),
+    )
 
     # syncs per decoded *position* is the architectural constant: the
     # legacy loop drains every position (1.0), the fori_loop engine drains
@@ -66,6 +131,17 @@ def run():
          f"tok_s={tps_new:.1f};syncs_per_tok={spt_new:.3f};"
          f"syncs_per_pos={1.0 / STEPS_PER_SYNC:.3f};"
          f"speedup={tps_new / max(tps_old, 1e-9):.2f}x"),
+        ("serve_paged_loop", 1e6 / max(tps_pg, 1e-9),
+         f"tok_s={tps_pg:.1f};syncs_per_tok={spt_pg:.3f};"
+         f"vs_contiguous={tps_pg / max(tps_new, 1e-9):.2f}x;"
+         f"block_size={PAGED_BS}"),
+        ("serve_packing_contiguous", 1e6 / max(tps_pc, 1e-9),
+         f"tok_s={tps_pc:.1f};max_concurrent={conc_c};"
+         f"hbm_rows={rows}"),
+        ("serve_packing_paged", 1e6 / max(tps_pp, 1e-9),
+         f"tok_s={tps_pp:.1f};max_concurrent={conc_p};"
+         f"hbm_rows={rows};concurrency_gain="
+         f"{conc_p / max(conc_c, 1):.1f}x"),
     ]
 
 

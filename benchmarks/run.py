@@ -1,7 +1,7 @@
 """Benchmark orchestrator — one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV; with ``--json`` also writes
 ``BENCH_<suite>.json`` next to the CSV so the perf trajectory is
-machine-readable (CI uploads the kernels suite per PR).
+machine-readable (CI uploads the kernels and serve suites per PR).
 
   bench_uts              — Fig 2/3/4: UTS-G scaling + efficiency
   bench_bc               — Fig 5/7/9: BC-G vs static scaling
@@ -9,7 +9,9 @@ machine-readable (CI uploads the kernels suite per PR).
   bench_params           — §2.4: w/z/n tuning space
   bench_kernels          — Pallas kernels vs oracles + CPU timings
   bench_moe_glb          — GLB applied to MoE expert placement
-  bench_serve            — engine decode loop: tokens/s + host syncs/token
+  bench_serve            — engine decode loop: tokens/s + host syncs/token,
+                           paged KV pool vs contiguous slots (throughput +
+                           max concurrency at fixed HBM)
 
 Usage: python benchmarks/run.py [suite-substring] [--json]
 """

@@ -2,8 +2,14 @@
 request balancer (paper's library applied to serving). All requests land on
 replica 0; the balancer's lifeline matching redistributes them.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py            # contiguous slots
+    PYTHONPATH=src python examples/serve_lm.py --paged    # paged KV pool
+
+With ``--paged`` each replica runs the block-granular KV pool + the
+continuous-batching scheduler (admission, watermark preemption) and the
+exit report includes pool occupancy/fragmentation.
 """
+import argparse
 import time
 
 import jax
@@ -14,10 +20,17 @@ from repro.serve.engine import Engine, GLBReplicaBalancer, Request
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache pool + scheduler per replica")
+    args = ap.parse_args()
+
     cfg = ARCHS["tinyllama-1.1b"].smoke()
     params = init_lm(jax.random.key(0), cfg)
-    engines = [Engine(cfg, params, max_slots=2, max_seq=64, pad_len=8)
-               for _ in range(2)]
+    kw = dict(max_slots=2, max_seq=64, pad_len=8)
+    if args.paged:
+        kw.update(paged=True, block_size=8)
+    engines = [Engine(cfg, params, **kw) for _ in range(2)]
     bal = GLBReplicaBalancer(engines)
 
     reqs = [
@@ -33,10 +46,20 @@ def main():
     dt = time.time() - t0
     assert all(r.done for r in reqs)
     total = sum(e.tokens_out for e in engines)
-    print(f"completed {len(reqs)} requests, {total} tokens in {dt:.1f}s")
+    mode = "paged" if args.paged else "contiguous"
+    print(f"[{mode}] completed {len(reqs)} requests, {total} tokens "
+          f"in {dt:.1f}s")
     for i, e in enumerate(engines):
-        print(f"  replica {i}: {e.tokens_out} tokens, {e.steps} steps")
-    print(f"GLB moves: {bal.moves} (queued requests stolen by idle replica)")
+        line = (f"  replica {i}: {e.tokens_out} tokens, {e.steps} steps, "
+                f"peak {e.peak_running} concurrent")
+        if args.paged:
+            line += (f", peak pool occupancy {e.peak_occupancy:.2f}, "
+                     f"peak fragmentation {e.peak_fragmentation:.2f}, "
+                     f"{e.sched.admissions} admissions, "
+                     f"{e.sched.preemptions} preemptions")
+        print(line)
+    print(f"GLB moves: {bal.moves} (queued requests stolen by hungry "
+          f"replica)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.prompt} -> {r.out}")
 

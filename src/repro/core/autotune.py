@@ -38,13 +38,35 @@ def decode_block_k(kv_len: int, head_dim: int) -> int:
     """KV block size for kernels.flash_decode: table lookup by head_dim
     with a halving fallback so the block always divides the (bucketed)
     cache length."""
-    bk = min(DECODE_BLOCK_K.values())
-    for hd in sorted(DECODE_BLOCK_K):
+    return _block_from_table(DECODE_BLOCK_K, kv_len, head_dim)
+
+
+# Paged KV pool block sizes (tokens per block), keyed by head_dim. The
+# paged kernel streams exactly one pool block per grid step, so this is
+# both the allocator granularity and the kernel tile: small enough that
+# internal fragmentation (the partially-filled tail block per sequence)
+# stays low at production request lengths, large enough that the (1, D) x
+# (Bs, D)^T step keeps the MXU lanes busy and the per-block DMA amortizes.
+# 4-8x smaller than DECODE_BLOCK_K — the contiguous kernel pays
+# fragmentation at *bucket* granularity instead, so it wants big tiles.
+PAGED_BLOCK_KV = {32: 64, 64: 64, 128: 32, 256: 16}
+
+
+def paged_block_kv(max_seq: int, head_dim: int) -> int:
+    """Pool/kernel block size for kernels.paged_decode: table lookup by
+    head_dim, halved until it divides the per-sequence cache cap (the
+    block-table width max_seq // block must be exact)."""
+    return _block_from_table(PAGED_BLOCK_KV, max_seq, head_dim)
+
+
+def _block_from_table(table: dict, length: int, head_dim: int) -> int:
+    bk = min(table.values())
+    for hd in sorted(table):
         if head_dim <= hd:
-            bk = DECODE_BLOCK_K[hd]
+            bk = table[hd]
             break
-    bk = max(1, min(bk, kv_len))
-    while kv_len % bk:
+    bk = max(1, min(bk, length))
+    while length % bk:
         bk //= 2
     return max(bk, 1)
 

@@ -10,6 +10,7 @@ import jax
 from . import ref
 from .flash_attention import flash_attention
 from .flash_decode import flash_decode
+from .paged_decode import paged_decode
 from .mamba2_ssd import ssd_chunked
 from .moe_gmm import gmm as gmm_pallas
 from .uts_expand import uts_expand
@@ -20,14 +21,24 @@ def _on_tpu() -> bool:
 
 
 def attention(q, k, v, *, causal=True, scale=None, impl: str = "auto",
-              block_q: int = 128, block_k: int = 128, lengths=None):
+              block_q: int = 128, block_k: int = 128, lengths=None,
+              block_tables=None):
     """impl: auto | pallas | pallas_interpret | ref | chunked
           | decode | decode_interpret | decode_ref
+          | paged | paged_interpret | paged_ref
 
     `lengths` ((B,) i32 visible-window sizes against a padded KV cache)
     plus Sq == 1 selects the split-KV flash-decode fast path: `auto`
     routes such calls to the decode kernel on TPU and the masked-window
     oracle elsewhere; the decode_* impls force one arm.
+
+    `block_tables` ((B, max_blocks) i32) additionally marks k/v as flat
+    (num_blocks, block_size, Hkv, D) KV *pools* indirected per sequence
+    through the table (serve/kvpool.py): calls route to the paged
+    flash-decode kernel on TPU and the gather oracle elsewhere. Every
+    impl spelling is normalized so one config knob drives contiguous and
+    paged decode alike — the window mask and table walk are never
+    dropped.
     """
     if lengths is not None and q.shape[1] != 1:
         raise ValueError(
@@ -35,6 +46,25 @@ def attention(q, k, v, *, causal=True, scale=None, impl: str = "auto",
             f"{q.shape[1]}; dropping the window mask would silently "
             "attend to dead cache rows"
         )
+    if block_tables is not None:
+        if lengths is None:
+            raise ValueError("block_tables requires lengths")
+        impl = {
+            "auto": "paged" if _on_tpu() else "paged_ref",
+            "pallas": "paged",
+            "pallas_interpret": "paged_interpret",
+            "ref": "paged_ref",
+            "chunked": "paged_ref",
+            "decode": "paged",
+            "decode_interpret": "paged_interpret",
+            "decode_ref": "paged_ref",
+        }.get(impl, impl)
+        if impl == "paged_ref":
+            return ref.paged_decode_ref(q, k, v, block_tables, lengths,
+                                        scale=scale)
+        assert impl in ("paged", "paged_interpret"), impl
+        return paged_decode(q, k, v, block_tables, lengths, scale=scale,
+                            interpret=(impl == "paged_interpret"))
     is_decode = lengths is not None
     if is_decode:
         # Normalize the prefill impl names so one config knob drives both

@@ -1,0 +1,144 @@
+"""Paged split-KV Pallas flash-decode kernel: one query token against a
+block-table-indirected KV pool (Sq == 1, the paged serving hot path).
+
+flash_decode.py streams a *contiguous* per-slot cache; here the cache is
+a flat pool of KV blocks shared by every sequence (serve/kvpool.py) and
+each sequence names its blocks through a block table. Two scalar-prefetch
+operands — ``block_tables`` (B, max_blocks) i32 and ``lengths`` (B,) i32
+— arrive before the kernel body runs, so the k/v **index maps walk the
+table**: grid step ``(b, h, j)`` fetches physical block
+``block_tables[b, min(j, last_live(b))]`` instead of row-range
+``[j*bk, (j+1)*bk)`` of a dense cache. The same three-level gating as
+the contiguous kernel applies:
+
+  * DMA clamp   — past-window grid steps clamp the *logical* block index
+    to the last live one; the table lookup then repeats the same physical
+    block, the pipeline sees an unchanged index and issues no DMA — dead
+    blocks are never fetched;
+  * block skip  — ``pl.when`` drops compute for blocks at or past the
+    window (idle slots, window == 0, skip everything and emit zeros);
+  * lane mask   — the partial tail block masks key positions >= window.
+
+The KV block size is the pool's block size (one pool block per grid
+step), chosen by ``core.autotune.paged_block_kv``; GQA rides on the
+kv-head index map (h // group) as everywhere else. Oracle:
+``ref.paged_decode_ref`` (gather blocks -> decode_ref). Routed via
+``ops.attention(..., block_tables=...)``; validated in interpret mode on
+CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                  m_ref, l_ref, *, scale, block_size, max_blocks):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    n = len_ref[b]  # visible window (tokens) for this slot; 0 => idle
+
+    @pl.when(j * block_size < n)  # skip past-window blocks and idle slots
+    def _body():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32)[None, :]      # (1, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)               # (Bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)               # (Bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                               # (1, Bs)
+        kpos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_size), 1
+        )
+        live = kpos < n
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]                                     # (1, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(live, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                         # (1, 1)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+
+    @pl.when(j == max_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # idle slot: acc == 0 -> output 0
+        o_ref[0, 0, 0, :] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
+                 scale: float | None = None, interpret: bool = False):
+    """q: (B, 1, Hq, D); k_pool, v_pool: (num_blocks, Bs, Hkv, D) flat
+    block pools; block_tables: (B, max_blocks) i32 physical block per
+    logical block (entries past the allocation may be any value — they
+    are clamped away); lengths: (B,) i32 visible window (0 => idle slot,
+    output zeros). Returns (B, 1, Hq, D)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, Sq, Hq, D = q.shape
+    NB, Bs, Hkv, _ = k_pool.shape
+    assert Sq == 1, f"paged_decode is Sq==1 only, got {Sq}"
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    max_blocks = block_tables.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(D)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    def kv_map(b, h, j, bt, lens):
+        # Walk the block table. Past-window logical blocks clamp to the
+        # last live one so the physical index repeats (no DMA, compute
+        # skipped by pl.when); unallocated/garbage table entries are
+        # clamped into the pool so the address is always valid.
+        last = jnp.maximum(lens[b] - 1, 0) // Bs
+        phys = bt[b, jnp.minimum(j, last)]
+        return (jnp.clip(phys, 0, NB - 1), 0, h // group, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, block_size=Bs, max_blocks=max_blocks
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, j, bt, lens: (b, 0, h, 0)),
+            pl.BlockSpec((1, Bs, 1, D), kv_map),
+            pl.BlockSpec((1, Bs, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, D), lambda b, h, j, bt, lens: (b, 0, h, 0)
+        ),
+        # VMEM scratch carried across the sequential block-walk dimension.
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((1, 1), jnp.float32),   # running max
+            pltpu.VMEM((1, 1), jnp.float32),   # running denominator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(bt, lens, q, k_pool, v_pool)

@@ -70,6 +70,24 @@ def decode_ref(q, k, v, lengths, scale: float | None = None):
     return o.reshape(B, 1, Hq, hd).astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths,
+                     scale: float | None = None):
+    """Sq==1 attention against a block-table-indirected KV pool (the
+    paged_decode oracle): gather each sequence's blocks into its logical
+    order, then decode_ref with the same window mask. Garbage table
+    entries past the allocation are clamped into the pool — the window
+    mask keeps their rows invisible.
+
+    q (B,1,Hq,hd); k_pool/v_pool (num_blocks, Bs, Hkv, hd);
+    block_tables (B, max_blocks) i32; lengths (B,) i32."""
+    B = q.shape[0]
+    NB, Bs, Hkv, hd = k_pool.shape
+    bt = jnp.clip(jnp.asarray(block_tables, jnp.int32), 0, NB - 1)
+    k = k_pool[bt].reshape(B, -1, Hkv, hd)      # (B, max_blocks*Bs, ...)
+    v = v_pool[bt].reshape(B, -1, Hkv, hd)
+    return decode_ref(q, k, v, lengths, scale=scale)
+
+
 def attention_chunked(q, k, v, causal: bool = True, scale: float | None = None,
                       block_q: int = 512):
     """Memory-bounded attention: lax.map over q blocks, full kv per block

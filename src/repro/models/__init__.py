@@ -1,11 +1,11 @@
 """Model substrate: composable decoder-only LM families (dense GQA, MoE,
 Mamba2/SSD, Zamba2-hybrid, VLM/audio backbone stubs)."""
 from .config import ModelConfig, ShapeConfig, SHAPES
-from .transformer import init_lm, forward, make_cache
+from .transformer import init_lm, forward, make_cache, make_paged_cache
 from .lm import train_loss, prefill, decode_step, sample_tokens
 
 __all__ = [
     "ModelConfig", "ShapeConfig", "SHAPES",
-    "init_lm", "forward", "make_cache",
+    "init_lm", "forward", "make_cache", "make_paged_cache",
     "train_loss", "prefill", "decode_step", "sample_tokens",
 ]

@@ -46,9 +46,12 @@ def attn_fwd(
     x,                       # (B, S, D)
     positions,               # (B, S) or (B, S, 3) for mrope
     cfg: ModelConfig,
-    cache: Optional[dict] = None,   # {"k","v"}: (B, S_max, Hkv, hd)
+    cache: Optional[dict] = None,   # {"k","v"}: (B, S_max, Hkv, hd), or
+                                    # paged pools (NB, Bs, Hkv, hd)
     cache_len=None,          # i32 scalar: valid entries in cache
     mode: str = "train",     # train | prefill | decode
+    block_tables=None,       # (B, max_blocks) i32: decode against paged
+                             # pools instead of a contiguous cache
 ) -> Tuple[jax.Array, Optional[dict]]:
     B, S, D = x.shape
     Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -75,24 +78,50 @@ def attn_fwd(
         # with -1 marking inactive serving slots (writes dropped, state
         # untouched).
         lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
-        S_max = cache["k"].shape[1]
-        widx = jnp.where(lens >= 0, lens, S_max)  # OOB => dropped
-        brow = jnp.arange(B)
-        ck = cache["k"].at[brow, widx].set(
-            k[:, 0].astype(cache["k"].dtype), mode="drop"
-        )
-        cv = cache["v"].at[brow, widx].set(
-            v[:, 0].astype(cache["v"].dtype), mode="drop"
-        )
-        # Cache lengths flow through as-is (no dense mask materialized
-        # here): visible window = cache_len entries + the token just
-        # written; idle slots (-1) get an empty window and a dead output.
         window = jnp.where(lens >= 0, lens + 1, 0)
-        o = ops.attention(
-            q, ck.astype(dt), cv.astype(dt), causal=False,
-            impl=cfg.decode_impl, lengths=window,
-        ).astype(dt)
-        new_cache = {"k": ck, "v": cv}
+        if block_tables is not None:
+            # Paged cache: token at logical position lens[b] lands in
+            # physical block block_tables[b, lens[b] // Bs] at offset
+            # lens[b] % Bs. The scheduler guarantees that block is
+            # allocated and exclusively owned (COW resolved); idle slots
+            # write out-of-bounds and are dropped.
+            NB, Bs = cache["k"].shape[0], cache["k"].shape[1]
+            bt = jnp.asarray(block_tables, jnp.int32)
+            pos = jnp.maximum(lens, 0)
+            phys = jnp.take_along_axis(
+                bt, (pos // Bs)[:, None], axis=1
+            )[:, 0]
+            phys = jnp.where(lens >= 0, phys, NB)   # OOB => dropped
+            off = pos % Bs
+            ck = cache["k"].at[phys, off].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop"
+            )
+            cv = cache["v"].at[phys, off].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop"
+            )
+            o = ops.attention(
+                q, ck.astype(dt), cv.astype(dt), causal=False,
+                impl=cfg.decode_impl, lengths=window, block_tables=bt,
+            ).astype(dt)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            S_max = cache["k"].shape[1]
+            widx = jnp.where(lens >= 0, lens, S_max)  # OOB => dropped
+            brow = jnp.arange(B)
+            ck = cache["k"].at[brow, widx].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop"
+            )
+            cv = cache["v"].at[brow, widx].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop"
+            )
+            # Cache lengths flow through as-is (no dense mask materialized
+            # here): visible window = cache_len entries + the token just
+            # written; idle slots (-1) get an empty window, a dead output.
+            o = ops.attention(
+                q, ck.astype(dt), cv.astype(dt), causal=False,
+                impl=cfg.decode_impl, lengths=window,
+            ).astype(dt)
+            new_cache = {"k": ck, "v": cv}
     else:
         import os
 

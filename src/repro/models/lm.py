@@ -66,11 +66,14 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], max_seq: int):
     return logits, cache
 
 
-def decode_step(params, cfg: ModelConfig, tokens, cache, cache_len):
-    """One token per sequence: tokens (B,1[,K]). Returns (logits, cache)."""
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_len,
+                block_tables=None):
+    """One token per sequence: tokens (B,1[,K]). Returns (logits, cache).
+    With ``block_tables`` the cache is the paged block pool
+    (make_paged_cache) instead of contiguous per-slot rows."""
     logits, cache, _ = forward(
         params, cfg, tokens=tokens, cache=cache, cache_len=cache_len,
-        mode="decode",
+        mode="decode", block_tables=block_tables,
     )
     return logits, cache
 

@@ -104,6 +104,32 @@ def make_cache(cfg: ModelConfig, batch: int, max_seq: int,
     return cache
 
 
+def make_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     slots: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Paged serving cache: attention k/v are flat per-layer *pools* of
+    ``num_blocks`` blocks of ``block_size`` tokens, shared by every
+    sequence and indirected through per-sequence block tables
+    (serve/kvpool.py owns the mapping). Recurrent conv/ssm state is O(1)
+    per sequence, so it stays dense per decode slot."""
+    cache: Dict[str, Any] = {}
+    na = n_attn_caches(cfg)
+    if na:
+        kv = (na, num_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+        cache["k"] = jnp.zeros(kv, dtype)
+        cache["v"] = jnp.zeros(kv, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        L = cfg.n_layers
+        k1 = cfg.ssm_conv - 1
+        cache["conv_x"] = jnp.zeros((L, slots, k1, cfg.d_inner), dtype)
+        cache["conv_B"] = jnp.zeros((L, slots, k1, cfg.ssm_state), dtype)
+        cache["conv_C"] = jnp.zeros((L, slots, k1, cfg.ssm_state), dtype)
+        cache["ssm"] = jnp.zeros(
+            (L, slots, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+            jnp.float32,
+        )
+    return cache
+
+
 def _slice_cache(cache, keys, idx):
     return {
         k.split("/")[-1]: jax.lax.dynamic_index_in_dim(cache[k], idx, 0, False)
@@ -122,12 +148,13 @@ def _update_cache(cache, keys, idx, new):
 
 
 # --------------------------------------------------------------- blocks
-def _apply_shared_block(cfg, sp, x, positions, cache, app_idx, cache_len, mode):
+def _apply_shared_block(cfg, sp, x, positions, cache, app_idx, cache_len,
+                        mode, block_tables=None):
     """Zamba2's weight-shared attention+MLP block."""
     h, new_kv = attn_fwd(
         sp["attn"], rmsnorm(x, sp["ln1"], cfg.norm_eps), positions, cfg,
         cache=None if not cache else _slice_cache(cache, ("k", "v"), app_idx),
-        cache_len=cache_len, mode=mode,
+        cache_len=cache_len, mode=mode, block_tables=block_tables,
     )
     x = x + h
     x = x + mlp_fwd(sp["mlp"], rmsnorm(x, sp["ln2"], cfg.norm_eps), x.dtype)
@@ -136,7 +163,8 @@ def _apply_shared_block(cfg, sp, x, positions, cache, app_idx, cache_len, mode):
     return x, cache
 
 
-def _apply_block(cfg, bp, shared, li, x, positions, cache, cache_len, mode):
+def _apply_block(cfg, bp, shared, li, x, positions, cache, cache_len, mode,
+                 block_tables=None):
     """One scanned layer. Returns (x, cache, aux)."""
     aux = _zero_aux(cfg)
     active = None
@@ -162,7 +190,8 @@ def _apply_block(cfg, bp, shared, li, x, positions, cache, cache_len, mode):
             def yes(args):
                 x, cache = args
                 return _apply_shared_block(
-                    cfg, shared, x, positions, cache, app_idx, cache_len, mode
+                    cfg, shared, x, positions, cache, app_idx, cache_len,
+                    mode, block_tables
                 )
 
             x, cache = jax.lax.cond(is_app, yes, lambda a: a, (x, cache))
@@ -172,6 +201,7 @@ def _apply_block(cfg, bp, shared, li, x, positions, cache, cache_len, mode):
     h, new_kv = attn_fwd(
         bp["attn"], rmsnorm(x, bp["ln1"], cfg.norm_eps), positions, cfg,
         cache=acache, cache_len=cache_len, mode=mode,
+        block_tables=block_tables,
     )
     x = x + h
     hin = rmsnorm(x, bp["ln2"], cfg.norm_eps)
@@ -208,7 +238,8 @@ def _remat(fn, cfg: ModelConfig):
     return jax.checkpoint(fn)  # "full": save nothing
 
 
-def run_layers(params, cfg: ModelConfig, x, positions, cache, cache_len, mode):
+def run_layers(params, cfg: ModelConfig, x, positions, cache, cache_len,
+               mode, block_tables=None):
     from repro.dist.sharding import shard_act
 
     shared = params.get("shared")
@@ -217,7 +248,8 @@ def run_layers(params, cfg: ModelConfig, x, positions, cache, cache_len, mode):
         x, cache, aux_acc = carry
         bp, li = xs
         x, cache, aux = _apply_block(
-            cfg, bp, shared, li, x, positions, cache, cache_len, mode
+            cfg, bp, shared, li, x, positions, cache, cache_len, mode,
+            block_tables
         )
         x = shard_act(x, "batch", "seq", "act_embed")
         aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc, aux)
@@ -272,6 +304,7 @@ def forward(
     cache: Optional[dict] = None,
     cache_len=None,
     mode: str = "train",
+    block_tables=None,        # (B, max_blocks) i32: paged decode cache
 ):
     if embeds is not None:
         x = embeds.astype(jnp.dtype(cfg.dtype))
@@ -289,7 +322,8 @@ def forward(
         positions = jnp.arange(S, dtype=jnp.int32)[None] + off
         if cfg.mrope:
             positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
-    x, cache, aux = run_layers(params, cfg, x, positions, cache, cache_len, mode)
+    x, cache, aux = run_layers(params, cfg, x, positions, cache, cache_len,
+                               mode, block_tables)
     x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
     logits = lm_logits(params, cfg, x)
     return logits, cache, aux

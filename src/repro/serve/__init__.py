@@ -1,4 +1,7 @@
 """Serving substrate: continuous-batching engine (jitted fori_loop
-multi-token decode steps, on-device sampling, split-KV flash-decode
-attention) + GLB replica balancer."""
+multi-token decode steps, on-device sampling, split-KV/paged flash-decode
+attention), paged KV-cache pool, admission/preemption scheduler, and the
+GLB replica balancer."""
 from .engine import Engine, GLBReplicaBalancer, Request  # noqa: F401
+from .kvpool import KVPool, PoolExhausted, PoolStats  # noqa: F401
+from .scheduler import ContinuousBatchingScheduler, StepPlan  # noqa: F401

@@ -15,10 +15,24 @@ writes and length/budget accounting, and each step emits an
 idle slot: its cache/state is untouched) flow through to the split-KV
 flash-decode kernel.
 
+``paged=True`` swaps the fixed contiguous per-slot KV rows for the paged
+subsystem (DESIGN.md §7): attention caches become flat block pools
+(``models.make_paged_cache``) mapped per sequence by ``serve.kvpool``,
+every engine step is planned by the continuous-batching scheduler
+(``serve.scheduler`` — lookahead block reservation, watermark-based
+preempt-and-requeue of the youngest sequence, per-step token budget,
+strict-FIFO admission), and decode attention walks the block table
+through the paged flash-decode kernel (`ops.attention(...,
+block_tables=)`). A preempted request resumes by recomputing its cache
+from prompt + generated-so-far, so greedy outputs are token-identical to
+an uninterrupted run.
+
 The multi-replica balancer treats per-replica queue depth as the GLB size
-vector and moves queued requests from overloaded to idle replicas with the
-same deterministic matching the task scheduler uses — the paper's library
-applied to serving (DESIGN.md §4/§6).
+vector and moves queued requests from overloaded to hungry replicas with
+the same deterministic matching the task scheduler uses — the paper's
+library applied to serving (DESIGN.md §4/§6). Hungry means "has a free
+slot and free KV blocks", so replicas steal on memory headroom, not only
+when fully idle.
 """
 from __future__ import annotations
 
@@ -31,8 +45,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import GLBParams, lifeline_buddies, match_steals
-from repro.models import decode_step, forward, make_cache, sample_tokens
+from repro.core.autotune import paged_block_kv
+from repro.models import (decode_step, forward, make_cache,
+                          make_paged_cache, sample_tokens)
 from repro.models.config import ModelConfig
+
+from .kvpool import KVPool
+from .scheduler import ContinuousBatchingScheduler
 
 
 @dataclasses.dataclass
@@ -44,18 +63,60 @@ class Request:
     done: bool = False
 
 
-def _make_fns(cfg: ModelConfig, max_seq: int, pad_len: int,
-              steps_per_sync: int, temperature: float):
+def _scrub_row(row):
+    # The reused row cache carries the previous request's state.
+    # Attention k/v tails are harmless (masked by cache length), but
+    # recurrent conv/ssm state feeds prefill directly and must be zero.
+    return {
+        name: (leaf if name in ("k", "v") else jnp.zeros_like(leaf))
+        for name, leaf in row.items()
+    }
+
+
+def _make_decode_loop(cfg: ModelConfig, max_seq: int, steps_per_sync: int,
+                      temperature: float):
+    """The jitted fori_loop fast path, shared by the contiguous and paged
+    engines (``bt`` is the block table for paged caches, None for
+    contiguous — one recurrence, so the done-mask/budget rules can never
+    diverge between the two)."""
     vocab = cfg.vocab
 
-    def _scrub_row(row):
-        # The reused row cache carries the previous request's state.
-        # Attention k/v tails are harmless (masked by cache length), but
-        # recurrent conv/ssm state feeds prefill directly and must be zero.
-        return {
-            name: (leaf if name in ("k", "v") else jnp.zeros_like(leaf))
-            for name, leaf in row.items()
-        }
+    @jax.jit
+    def decode_tokens(params, tokens, cache, bt, lens, budget, key):
+        """steps_per_sync decode steps entirely on device. Carries per-slot
+        done masks (idle: lens < 0; finished: budget == 0) and fills an
+        (N, slots) token buffer (-1 where a slot emitted nothing) that the
+        host drains with one sync."""
+        B = tokens.shape[0]
+        buf = jnp.full((steps_per_sync, B), -1, jnp.int32)
+
+        def body(t, carry):
+            tokens, cache, lens, budget, key, buf = carry
+            active = (lens >= 0) & (budget > 0)
+            step_lens = jnp.where(active, lens, -1)
+            logits, cache = decode_step(params, cfg, tokens, cache,
+                                        step_lens, block_tables=bt)
+            key, sub = jax.random.split(key)
+            nxt = sample_tokens(logits[:, 0, ..., :vocab], sub, temperature)
+            nxt = jnp.where(active, nxt, -1)
+            buf = buf.at[t].set(nxt)
+            lens = jnp.where(active, lens + 1, lens)
+            budget = jnp.where(active, budget - 1, budget)
+            budget = jnp.where(lens >= max_seq - 1, 0, budget)  # cache full
+            tokens = jnp.where(active[:, None], nxt[:, None], tokens)
+            return tokens, cache, lens, budget, key, buf
+
+        carry = (tokens, cache, lens, budget, key, buf)
+        tokens, cache, lens, budget, key, buf = jax.lax.fori_loop(
+            0, steps_per_sync, body, carry
+        )
+        return buf, cache, key
+
+    return decode_tokens
+
+
+def _make_fns(cfg: ModelConfig, temperature: float):
+    vocab = cfg.vocab
 
     @jax.jit
     def prefill_into_slot(params, tokens, cache, slot, row, true_len, key):
@@ -73,37 +134,6 @@ def _make_fns(cfg: ModelConfig, max_seq: int, pad_len: int,
         return first, cache, row
 
     @jax.jit
-    def decode_tokens(params, tokens, cache, lens, budget, key):
-        """steps_per_sync decode steps entirely on device. Carries per-slot
-        done masks (idle: lens < 0; finished: budget == 0) and fills an
-        (N, slots) token buffer (-1 where a slot emitted nothing) that the
-        host drains with one sync."""
-        B = tokens.shape[0]
-        buf = jnp.full((steps_per_sync, B), -1, jnp.int32)
-
-        def body(t, carry):
-            tokens, cache, lens, budget, key, buf = carry
-            active = (lens >= 0) & (budget > 0)
-            step_lens = jnp.where(active, lens, -1)
-            logits, cache = decode_step(params, cfg, tokens, cache,
-                                        step_lens)
-            key, sub = jax.random.split(key)
-            nxt = sample_tokens(logits[:, 0, ..., :vocab], sub, temperature)
-            nxt = jnp.where(active, nxt, -1)
-            buf = buf.at[t].set(nxt)
-            lens = jnp.where(active, lens + 1, lens)
-            budget = jnp.where(active, budget - 1, budget)
-            budget = jnp.where(lens >= max_seq - 1, 0, budget)  # cache full
-            tokens = jnp.where(active[:, None], nxt[:, None], tokens)
-            return tokens, cache, lens, budget, key, buf
-
-        carry = (tokens, cache, lens, budget, key, buf)
-        tokens, cache, lens, budget, key, buf = jax.lax.fori_loop(
-            0, steps_per_sync, body, carry
-        )
-        return buf, cache, key
-
-    @jax.jit
     def decode_one(params, tokens, cache, lens):
         # Pre-fast-path decode: one step, greedy, logits -> host argmax is
         # the caller's job historically; argmax stays on device here but
@@ -112,34 +142,114 @@ def _make_fns(cfg: ModelConfig, max_seq: int, pad_len: int,
         nxt = jnp.argmax(logits[:, 0, ..., :vocab], axis=-1)
         return nxt.astype(jnp.int32), cache
 
-    return prefill_into_slot, decode_tokens, decode_one
+    return prefill_into_slot, decode_one
+
+
+def _make_paged_fns(cfg: ModelConfig, max_seq: int, block_size: int,
+                    temperature: float):
+    vocab = cfg.vocab
+    max_blocks = max_seq // block_size
+
+    @jax.jit
+    def prefill_paged(params, tokens, cache, bt_scatter, slot, row,
+                      true_len, key):
+        """Prefill into the reused row cache, then scatter the row's KV
+        blocks into the pool through ``bt_scatter`` ((max_blocks,) i32,
+        out-of-bounds sentinel past the prompt's blocks => dropped).
+        Recurrent conv/ssm leaves stay slot-dense and write at ``slot``.
+        Retraces once per prompt bucket length (tokens.shape[1])."""
+        logits, row, _ = forward(
+            params, cfg, tokens=tokens, cache=_scrub_row(row),
+            cache_len=jnp.int32(0), mode="prefill",
+        )
+
+        def put(name, c, r):
+            if name in ("k", "v"):
+                na = c.shape[0]
+                rb = r[:, 0].reshape(
+                    na, max_blocks, block_size, c.shape[-2], c.shape[-1]
+                )
+                return c.at[:, bt_scatter].set(rb.astype(c.dtype),
+                                               mode="drop")
+            start = (0, slot) + (0,) * (c.ndim - 2)
+            return jax.lax.dynamic_update_slice(c, r.astype(c.dtype), start)
+
+        cache = {name: put(name, cache[name], row[name]) for name in cache}
+        first = sample_tokens(
+            logits[0, true_len - 1, ..., :vocab], key, temperature
+        )
+        return first, cache, row
+
+    @jax.jit
+    def copy_block(cache, src, dst):
+        """Apply one COW copy: physical block dst := src in the k/v
+        pools (recurrent slot state is never shared, nothing to copy)."""
+        out = dict(cache)
+        for name in ("k", "v"):
+            if name in cache:
+                out[name] = cache[name].at[:, dst].set(cache[name][:, src])
+        return out
+
+    return prefill_paged, copy_block
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
                  max_seq: int = 256, pad_len: int = 32,
                  steps_per_sync: int = 8, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, paged: bool = False,
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 watermark_blocks: int = 0,
+                 token_budget: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.pad_len = pad_len
         self.steps_per_sync = steps_per_sync
+        self.paged = paged
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.lens = np.full(max_slots, -1, np.int32)    # -1 => idle slot
         self.budget = np.zeros(max_slots, np.int32)     # tokens still owed
-        self.cache = make_cache(cfg, max_slots, max_seq, dtype=jnp.float32)
         self._row = make_cache(cfg, 1, max_seq, dtype=jnp.float32)
         self.tokens = np.zeros((max_slots, 1), np.int32)
         self._key = jax.random.key(seed)
-        self._prefill, self._decode_n, self._decode_1 = _make_fns(
-            cfg, max_seq, pad_len, steps_per_sync, temperature
-        )
         self.steps = 0
         self.tokens_out = 0
         self.host_syncs = 0    # blocking device->host transfer points
+        self.peak_running = 0  # max concurrent sequences observed
+        self.peak_occupancy = 0.0   # paged: max pool occupancy observed
+        self.peak_fragmentation = 0.0
+        if paged:
+            bs = block_size or paged_block_kv(max_seq, cfg.hd)
+            assert max_seq % bs == 0, (max_seq, bs)
+            self.block_size = bs
+            self.max_blocks = max_seq // bs
+            self.num_blocks = num_blocks or max_slots * self.max_blocks
+            assert self.num_blocks >= self.max_blocks, \
+                "pool must fit at least one full-length sequence"
+            self.pool = KVPool(self.num_blocks, bs)
+            self.sched = ContinuousBatchingScheduler(
+                self.pool, max_slots, lookahead=steps_per_sync,
+                max_seq=max_seq, watermark_blocks=watermark_blocks,
+                token_budget=token_budget,
+            )
+            self.cache = make_paged_cache(
+                cfg, self.num_blocks, bs, max_slots, dtype=jnp.float32
+            )
+            self._prefill_paged, self._copy_block = _make_paged_fns(
+                cfg, max_seq, bs, temperature
+            )
+        else:
+            self.cache = make_cache(cfg, max_slots, max_seq,
+                                    dtype=jnp.float32)
+            self._prefill, self._decode_1 = _make_fns(cfg, temperature)
+        # ONE decode recurrence for both cache layouts (bt=None contiguous)
+        self._decode_n = _make_decode_loop(
+            cfg, max_seq, steps_per_sync, temperature
+        )
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -147,6 +257,31 @@ class Engine:
     @property
     def load(self) -> int:
         return len(self.queue) + sum(s is not None for s in self.slots)
+
+    @property
+    def free_slots(self) -> int:
+        return sum(s is None for s in self.slots)
+
+    @property
+    def pool_occupancy(self) -> float:
+        """Memory-pressure signal for the replica balancer: fraction of
+        KV capacity in use (paged: live pool blocks; contiguous: busy
+        slots — each slot is a full max_seq reservation)."""
+        if self.paged:
+            return self.pool.occupancy
+        return 1.0 - self.free_slots / self.max_slots
+
+    def can_accept(self) -> bool:
+        """Whether one more typical admission fits right now: a free slot
+        and, for paged caches, the scheduler's own admission predicate
+        for a prompt-bucket-sized request (one policy, no drift)."""
+        if self.free_slots == 0:
+            return False
+        if not self.paged:
+            return True
+        return self.sched.can_admit(
+            self.pad_len, all(s is None for s in self.slots)
+        )
 
     def _admit(self):
         for i in range(self.max_slots):
@@ -177,20 +312,13 @@ class Engine:
             self.slots[i] = None
             self.lens[i] = -1
             self.budget[i] = 0
+            if self.paged:
+                self.sched.release(req.rid)
+                self.sched.slot_released(i)
 
-    def step(self):
-        """One engine iteration: admit, then `steps_per_sync` batched
-        decode steps on device with ONE host drain at the end (idle slots
-        carry lens=-1 and stay untouched)."""
-        self._admit()
-        if all(s is None for s in self.slots):
-            return
-        buf, self.cache, self._key = self._decode_n(
-            self.params, jnp.asarray(self.tokens), self.cache,
-            jnp.asarray(self.lens), jnp.asarray(self.budget), self._key,
-        )
-        buf = np.asarray(buf)               # the single drain
-        self.host_syncs += 1
+    def _drain(self, buf: np.ndarray):
+        """Extend per-request outputs from the (N, slots) token buffer and
+        mirror the device lens/budget recurrence on the host."""
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -203,12 +331,128 @@ class Engine:
             self.lens[i] += n
             self.budget[i] -= n
             self.tokens_out += n
+            if self.paged and n:
+                self.pool.advance(req.rid, int(self.lens[i]))
             self._finish_check(i, req)
+
+    # ------------------------------------------------------------ paged path
+    def _prefix_len(self, req: Request) -> int:
+        """Cache rows an admission must prefill: the (bucketed) prompt,
+        plus all-but-the-last generated token when resuming a preempted
+        request (the last one is the next feed token)."""
+        return min(len(req.prompt), self.pad_len) + max(len(req.out) - 1, 0)
+
+    def _admit_paged(self, slot: int, req: Request):
+        """Prefill a scheduler-admitted request into ``slot``. Fresh
+        requests sample their first token from the prefill logits; a
+        preempted request resumes by recomputing its cache from
+        prompt + generated-so-far (greedy-token-identical to never having
+        been preempted) and re-feeds its last generated token."""
+        resume = len(req.out) > 0
+        prefix = list(req.prompt[: self.pad_len]) + list(req.out[:-1])
+        true_len = len(prefix)
+        bucket = min(-(-true_len // self.pad_len) * self.pad_len,
+                     self.max_seq)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :true_len] = prefix
+        # Scatter table: physical blocks for the prefix, OOB sentinel for
+        # everything past it (lookahead blocks are written by decode).
+        table = self.pool.block_table(req.rid)
+        n_pb = -(-true_len // self.block_size)
+        bt_scatter = np.full(self.max_blocks, self.num_blocks, np.int32)
+        bt_scatter[:n_pb] = table[:n_pb]
+        self._key, sub = jax.random.split(self._key)
+        first, self.cache, self._row = self._prefill_paged(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(bt_scatter), slot, self._row, true_len, sub,
+        )
+        if resume:
+            self.tokens[slot, 0] = req.out[-1]
+            self.budget[slot] = req.max_new - (len(req.out) - 1)
+        else:
+            first = int(first)          # one sync per fresh admission
+            self.host_syncs += 1
+            req.out.append(first)
+            self.tokens[slot, 0] = first
+            self.budget[slot] = req.max_new
+            self.tokens_out += 1
+        self.lens[slot] = true_len
+
+    def _device_tables(self) -> jax.Array:
+        bt = np.zeros((self.max_slots, self.max_blocks), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = self.pool.block_table(req.rid)
+            bt[i, : len(t)] = t
+        return jnp.asarray(bt)
+
+    def _step_paged(self):
+        plan = self.sched.plan_step(self.queue, self.slots, self.lens,
+                                    self._prefix_len)
+        for slot, _req in plan.preempted:
+            self.lens[slot] = -1
+            self.budget[slot] = 0
+            self.tokens[slot, 0] = 0
+        for src, dst in plan.copies:
+            self.cache = self._copy_block(
+                self.cache, jnp.int32(src), jnp.int32(dst)
+            )
+        for slot, req in plan.admit:
+            self._admit_paged(slot, req)
+        running = sum(s is not None for s in self.slots)
+        self.peak_running = max(self.peak_running, running)
+        s = self.pool.stats()
+        self.peak_occupancy = max(self.peak_occupancy, s.occupancy)
+        self.peak_fragmentation = max(self.peak_fragmentation,
+                                      s.fragmentation)
+        if running == 0:
+            return
+        step_lens = np.where(plan.active, self.lens, -1).astype(np.int32)
+        # A partial reservation (watermark-starved pool) caps this step's
+        # writes at the granted capacity; the real budget is decremented
+        # by the drain, so the remainder carries to the next step.
+        cap_left = np.maximum(plan.granted - self.lens, 0)
+        step_budget = np.where(
+            plan.active, np.minimum(self.budget, cap_left), self.budget
+        ).astype(np.int32)
+        buf, self.cache, self._key = self._decode_n(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            self._device_tables(), jnp.asarray(step_lens),
+            jnp.asarray(step_budget), self._key,
+        )
+        buf = np.asarray(buf)               # the single drain
+        self.host_syncs += 1
+        self._drain(buf)
+        self.steps += 1
+
+    # ------------------------------------------------------------------ step
+    def step(self):
+        """One engine iteration: admit, then `steps_per_sync` batched
+        decode steps on device with ONE host drain at the end (idle slots
+        carry lens=-1 and stay untouched). Paged engines delegate
+        admission/preemption to the continuous-batching scheduler."""
+        if self.paged:
+            return self._step_paged()
+        self._admit()
+        if all(s is None for s in self.slots):
+            return
+        self.peak_running = max(
+            self.peak_running, sum(s is not None for s in self.slots)
+        )
+        buf, self.cache, self._key = self._decode_n(
+            self.params, jnp.asarray(self.tokens), self.cache, None,
+            jnp.asarray(self.lens), jnp.asarray(self.budget), self._key,
+        )
+        buf = np.asarray(buf)               # the single drain
+        self.host_syncs += 1
+        self._drain(buf)
         self.steps += 1
 
     def step_legacy(self):
         """The pre-fast-path loop: ONE decode step and one host round-trip
         per token. Kept as the bench_serve / equivalence baseline."""
+        assert not self.paged, "step_legacy is the contiguous baseline"
         self._admit()
         if all(s is None for s in self.slots):
             return
@@ -233,7 +477,14 @@ class Engine:
 
 class GLBReplicaBalancer:
     """GLB over replicas: queue depths are the size vector; hungry replicas
-    steal queued requests via the deterministic matching."""
+    steal queued requests via the deterministic matching.
+
+    Hungry = "can admit more work right now": a free decode slot AND (for
+    paged engines) free KV blocks above the watermark, with an empty local
+    queue — so a replica under memory pressure never steals, and a busy
+    replica with spare capacity does (it used to require total idleness).
+    Steals drain the victim's queue oldest-first (FIFO), preserving
+    arrival order for the stolen requests."""
 
     def __init__(self, engines: List[Engine],
                  params: GLBParams = GLBParams()):
@@ -252,7 +503,9 @@ class GLBReplicaBalancer:
 
     def balance(self):
         sizes = np.asarray([len(e.queue) for e in self.engines], np.int32)
-        hungry = np.asarray([e.load == 0 for e in self.engines])
+        hungry = np.asarray(
+            [e.can_accept() and len(e.queue) == 0 for e in self.engines]
+        )
         m = match_steals(
             jnp.asarray(sizes), jnp.asarray(hungry), self._pending,
             jax.random.fold_in(jax.random.key(17), self._step),
@@ -266,7 +519,9 @@ class GLBReplicaBalancer:
             v = self.engines[int(victim)]
             take = max(1, len(v.queue) // 2)
             for _ in range(min(take, len(v.queue))):
-                self.engines[thief].submit(v.queue.pop())
+                # Oldest-first: stolen requests keep their arrival order
+                # on the thief instead of inverting the victim's tail.
+                self.engines[thief].submit(v.queue.popleft())
                 self.moves += 1
         self._step += 1
 

@@ -1,0 +1,255 @@
+"""Block-granular KV-cache pool: the host-side allocator behind paged
+serving (vLLM's PagedAttention memory model applied to this stack).
+
+The device holds one flat pool of KV blocks per attention layer
+(``models.make_paged_cache``); this module owns the *mapping* — which
+physical block backs logical block ``i`` of sequence ``s``. Key
+properties:
+
+* **free-list allocator** — a min-heap of free physical block ids, so
+  allocation order is deterministic (lowest id first) and test-stable
+  regardless of free order;
+* **refcounted blocks** — ``fork`` shares a parent's blocks with the
+  child by bumping refcounts, so a shared prompt prefix occupies HBM
+  once no matter how many continuations hang off it;
+* **copy-on-write** — ``reserve``/``extend`` return ``(src, dst)``
+  physical copy pairs for any shared block the sequence is about to
+  write into (the partial tail block after a fork); the caller applies
+  them to the device pool before decoding. Blocks a sequence only
+  *reads* stay shared forever;
+* **reservation vs written** — ``reserve`` grows capacity (the
+  scheduler's decode lookahead), ``advance`` records tokens actually
+  written, ``extend`` does both; stats separate the two so
+  fragmentation reports real waste, not lookahead;
+* **stats** — occupancy (live blocks / pool size) and internal
+  fragmentation (allocated-but-unused token slots) feed the serving
+  scheduler's admission watermark and the GLB replica balancer's
+  memory-pressure signal.
+
+The pool never touches device memory: it hands out integer block ids and
+copy instructions; ``serve.engine`` owns the jitted gather/scatter that
+realizes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Tuple
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an alloc/extend needs more free blocks than exist."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolStats:
+    num_blocks: int
+    block_size: int
+    live_blocks: int          # blocks with refcount > 0
+    free_blocks: int
+    num_seqs: int
+    used_tokens: int          # sum of per-seq WRITTEN lengths
+    occupancy: float          # live_blocks / num_blocks
+    fragmentation: float      # 1 - used / sum(per-seq allocated capacity):
+                              # reserved-but-unwritten token slots (partial
+                              # tail blocks + lookahead reservations).
+                              # Per-seq denominator so forked shared blocks
+                              # weigh once per owner, like the numerator.
+
+
+class KVPool:
+    """Host-side block allocator for the paged KV cache.
+
+    ``num_blocks`` physical blocks of ``block_size`` tokens each. A
+    sequence's logical address space is its block table: logical token
+    ``t`` lives in physical block ``table[t // block_size]`` at offset
+    ``t % block_size``.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks))
+        heapq.heapify(self._free)
+        self._ref = [0] * num_blocks
+        self._tables: Dict[int, List[int]] = {}
+        self._lens: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ internals
+    def _take_block(self) -> int:
+        if not self._free:
+            raise PoolExhausted("KV pool out of blocks")
+        b = heapq.heappop(self._free)
+        assert self._ref[b] == 0
+        self._ref[b] = 1
+        return b
+
+    def _drop_block(self, b: int) -> None:
+        assert self._ref[b] > 0, f"double free of block {b}"
+        self._ref[b] -= 1
+        if self._ref[b] == 0:
+            heapq.heappush(self._free, b)
+
+    def _nblocks(self, tokens: int) -> int:
+        return -(-tokens // self.block_size) if tokens > 0 else 0
+
+    # ------------------------------------------------------------------ api
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, tokens: int) -> int:
+        """Physical blocks a ``tokens``-long sequence needs."""
+        return self._nblocks(tokens)
+
+    def can_alloc(self, tokens: int) -> bool:
+        return self._nblocks(tokens) <= self.free_blocks
+
+    def has_seq(self, sid: int) -> bool:
+        return sid in self._tables
+
+    def seq_len(self, sid: int) -> int:
+        return self._lens[sid]
+
+    def block_table(self, sid: int) -> List[int]:
+        return list(self._tables[sid])
+
+    def capacity(self, sid: int) -> int:
+        """Allocated token capacity (blocks x block_size)."""
+        return len(self._tables[sid]) * self.block_size
+
+    def alloc(self, sid: int, tokens: int) -> List[int]:
+        """Allocate a new sequence whose first ``tokens`` tokens are (about
+        to be) written. Returns its block table. Raises PoolExhausted
+        (allocating nothing) if the free list is short."""
+        if sid in self._tables:
+            raise ValueError(f"seq {sid} already allocated")
+        need = self._nblocks(tokens)
+        if need > self.free_blocks:
+            raise PoolExhausted(
+                f"need {need} blocks, {self.free_blocks} free"
+            )
+        self._tables[sid] = [self._take_block() for _ in range(need)]
+        self._lens[sid] = tokens
+        return self.block_table(sid)
+
+    def blocks_needed(self, sid: int, tokens: int) -> int:
+        """Free blocks a ``reserve(sid, tokens)`` would consume: new
+        blocks past current capacity PLUS one per shared block in the
+        write range (the COW copies). Watermark checks must use this, not
+        raw capacity arithmetic."""
+        table = self._tables[sid]
+        written = self._lens[sid]
+        if tokens <= written:
+            return 0
+        end_blk = self._nblocks(tokens)
+        cow = sum(
+            1 for idx in range(written // self.block_size,
+                               min(end_blk, len(table)))
+            if self._ref[table[idx]] > 1
+        )
+        return max(end_blk - len(table), 0) + cow
+
+    def reserve(self, sid: int, tokens: int) -> Tuple[List[int],
+                                                      List[Tuple[int, int]]]:
+        """Ensure capacity for ``tokens`` total WITHOUT advancing the
+        written length (the scheduler's lookahead reservation). Returns
+        ``(new_blocks, copies)`` where ``copies`` is a list of
+        ``(src_phys, dst_phys)`` pairs the caller must apply to the device
+        pool: a copy appears iff the next write position sits in a shared
+        block (refcount > 1) — the copy-on-write step after ``fork``.
+        Atomic: on PoolExhausted nothing changed."""
+        table = self._tables[sid]
+        written = self._lens[sid]
+        if tokens <= written:
+            return [], []
+        end_blk = self._nblocks(tokens)
+        need_new = max(end_blk - len(table), 0)
+        # COW check: EVERY already-allocated shared block the write range
+        # [written, tokens) touches — the partial tail block plus any
+        # shared lookahead blocks a fork inherited. Blocks strictly before
+        # the write range are read-only and stay shared.
+        cow_idxs = [
+            idx for idx in range(written // self.block_size,
+                                 min(end_blk, len(table)))
+            if self._ref[table[idx]] > 1
+        ]
+        if need_new + len(cow_idxs) > self.free_blocks:
+            raise PoolExhausted(
+                f"reserve needs {need_new + len(cow_idxs)} blocks, "
+                f"{self.free_blocks} free"
+            )
+        copies: List[Tuple[int, int]] = []
+        for idx in cow_idxs:
+            src = table[idx]
+            dst = self._take_block()
+            copies.append((src, dst))
+            self._drop_block(src)   # shared: stays alive for the other seq
+            table[idx] = dst
+        new_blocks = [self._take_block() for _ in range(need_new)]
+        table.extend(new_blocks)
+        return new_blocks, copies
+
+    def advance(self, sid: int, tokens: int) -> None:
+        """Record that the sequence's written length grew to ``tokens``
+        (must stay within reserved capacity; never shrinks)."""
+        if tokens > self.capacity(sid):
+            raise ValueError(
+                f"advance({tokens}) beyond capacity {self.capacity(sid)}"
+            )
+        self._lens[sid] = max(self._lens[sid], tokens)
+
+    def extend(self, sid: int, tokens: int) -> Tuple[List[int],
+                                                     List[Tuple[int, int]]]:
+        """Grow seq ``sid`` to ``tokens`` *written* tokens: reserve the
+        capacity (COW included) and advance in one call."""
+        out = self.reserve(sid, tokens)
+        if tokens > self._lens[sid]:
+            self.advance(sid, tokens)
+        return out
+
+    def fork(self, parent: int, child: int) -> List[int]:
+        """Register ``child`` sharing every block of ``parent`` (prefix
+        cached once). Blocks become refcount-shared; the child's first
+        write past the shared prefix triggers the COW copy in extend()."""
+        if child in self._tables:
+            raise ValueError(f"seq {child} already allocated")
+        table = self._tables[parent]
+        for b in table:
+            self._ref[b] += 1
+        self._tables[child] = list(table)
+        self._lens[child] = self._lens[parent]
+        return self.block_table(child)
+
+    def free(self, sid: int) -> None:
+        """Release the sequence: each block's refcount drops, blocks
+        return to the free heap at refcount 0. Freeing an unknown sid
+        raises (double-free guard)."""
+        if sid not in self._tables:
+            raise KeyError(f"seq {sid} not allocated (double free?)")
+        for b in self._tables.pop(sid):
+            self._drop_block(b)
+        del self._lens[sid]
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> PoolStats:
+        live = self.num_blocks - self.free_blocks
+        used = sum(self._lens.values())
+        # Per-seq capacity: forked shared blocks count once per owner, the
+        # same way the written numerator does, so the ratio stays in [0,1].
+        cap = sum(len(t) for t in self._tables.values()) * self.block_size
+        return PoolStats(
+            num_blocks=self.num_blocks,
+            block_size=self.block_size,
+            live_blocks=live,
+            free_blocks=self.free_blocks,
+            num_seqs=len(self._tables),
+            used_tokens=used,
+            occupancy=live / self.num_blocks,
+            fragmentation=max(0.0, 1.0 - used / cap) if cap else 0.0,
+        )
+
+    @property
+    def occupancy(self) -> float:
+        return (self.num_blocks - self.free_blocks) / self.num_blocks

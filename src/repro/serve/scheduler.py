@@ -1,0 +1,215 @@
+"""Continuous-batching scheduler: admission, lookahead block reservation,
+and preempt-and-requeue over the paged KV pool.
+
+This is the serving analogue of the GLB runtime loop the paper argues for
+(§1-2): the *runtime*, not the request stream, decides what occupies the
+accelerator each superstep. Per engine step the scheduler produces a
+``StepPlan``:
+
+* **token budget** — the oldest running sequences are selected until
+  ``token_budget`` decode positions (slots x steps_per_sync) are claimed;
+  the rest pause this step (their slot state is untouched — a paused slot
+  just passes lens = -1 into the decode loop);
+* **lookahead reservation** — every *active* sequence gets pool capacity
+  for the full ``lookahead`` (= steps_per_sync) tokens the jitted decode
+  loop will write, so the loop never runs out of blocks mid-flight. COW
+  copies surfaced by ``KVPool.extend`` are returned for the engine to
+  apply before decoding;
+* **watermark preemption** — when a reservation (or admission) would
+  leave fewer than ``watermark_blocks`` free, the *youngest* running
+  sequence is preempted: its blocks are freed and the request goes back
+  to the FRONT of the queue with its generated tokens kept. Re-admission
+  recomputes the cache by prefilling prompt + generated-so-far (resume by
+  recompute), which keeps greedy decoding token-identical across a
+  preempt/resume cycle. A sequence never preempts *itself*: with no
+  younger victim it takes a partial reservation (the engine clamps that
+  step's writes to the granted capacity), and the oldest sequence may
+  consume the watermark headroom outright — so progress is guaranteed
+  and a too-tight watermark degrades throughput, never liveness;
+* **admission** — while a slot is free, the head of the queue fits under
+  the watermark, and the token budget has room, requests are admitted
+  strictly FIFO (head-of-line blocking preserves arrival order rather
+  than back-filling around a big request).
+
+The scheduler owns every ``KVPool`` mutation; the engine owns the device
+side (prefill scatter, COW block copies, the decode loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from .kvpool import KVPool, PoolExhausted
+
+
+@dataclasses.dataclass
+class StepPlan:
+    admit: List[Tuple[int, object]]          # (slot, request) to prefill
+    preempted: List[Tuple[int, object]]      # (slot, request) freed+requeued
+    copies: List[Tuple[int, int]]            # COW (src, dst) block copies
+    active: np.ndarray                       # (slots,) bool decode mask
+    granted: np.ndarray                      # (slots,) i32 token capacity
+                                             # reserved per slot; the engine
+                                             # clamps each slot's step budget
+                                             # to granted - lens so a partial
+                                             # reservation can never be
+                                             # overrun by the decode loop
+
+
+class ContinuousBatchingScheduler:
+    """Plans one engine step over a shared KVPool. ``lookahead`` is how
+    many tokens the jitted decode loop writes per step (steps_per_sync);
+    ``watermark_blocks`` is the free-block floor that triggers preemption
+    instead of reservation; ``token_budget`` caps decode positions
+    scheduled per step (None = unlimited)."""
+
+    def __init__(self, pool: KVPool, max_slots: int, lookahead: int,
+                 max_seq: int, watermark_blocks: int = 0,
+                 token_budget: Optional[int] = None):
+        self.pool = pool
+        self.max_slots = max_slots
+        self.lookahead = lookahead
+        self.max_seq = max_seq
+        self.watermark = watermark_blocks
+        self.token_budget = token_budget
+        self._admit_seq = 0                    # monotonic admission clock
+        self._order = [-1] * max_slots         # slot -> admission seqno
+        self.preemptions = 0
+        self.admissions = 0
+
+    # --------------------------------------------------------------- helpers
+    def _occupied_oldest_first(self, slots) -> List[int]:
+        occ = [i for i in range(self.max_slots) if slots[i] is not None]
+        return sorted(occ, key=lambda i: self._order[i])
+
+    def _youngest(self, slots) -> Optional[int]:
+        occ = [i for i in range(self.max_slots) if slots[i] is not None]
+        if not occ:
+            return None
+        return max(occ, key=lambda i: self._order[i])
+
+    def _max_active(self) -> int:
+        if self.token_budget is None:
+            return self.max_slots
+        return max(1, self.token_budget // max(self.lookahead, 1))
+
+    def can_admit(self, prefix_len: int, engine_empty: bool) -> bool:
+        """THE admission predicate (plan_step and the balancer's hunger
+        signal both use it, so they cannot drift): does a ``prefix_len``
+        admission plus decode lookahead fit, leaving the watermark
+        headroom free — or, on an empty engine, fit at all?"""
+        target = min(prefix_len + self.lookahead, self.max_seq)
+        need = self.pool.blocks_for(target)
+        floor = 0 if engine_empty else self.watermark
+        return (need <= self.pool.free_blocks
+                and self.pool.free_blocks - need >= floor)
+
+    def _preempt(self, victim: int, slots, queue: Deque,
+                 plan: StepPlan) -> None:
+        req = slots[victim]
+        self.pool.free(req.rid)
+        plan.preempted.append((victim, req))
+        queue.appendleft(req)
+        slots[victim] = None
+        self._order[victim] = -1
+        self.preemptions += 1
+
+    # ------------------------------------------------------------------ plan
+    def plan_step(self, queue: Deque, slots: List, lens: np.ndarray,
+                  prefix_len_of) -> StepPlan:
+        """Mutates ``queue``/``slots`` for preemptions and admissions
+        (the engine applies the device-side effects afterwards).
+        ``prefix_len_of(req)`` gives the cache rows an admission must
+        prefill (prompt, plus generated tokens when resuming).
+
+        Liveness: the oldest running sequence reserves below the
+        watermark, shrinking to a partial reservation when no *younger*
+        victim exists (it never preempts itself), and an empty engine
+        admits the queue head on raw free blocks — so some sequence
+        always makes progress and a too-tight watermark degrades to
+        smaller steps instead of deadlock."""
+        plan = StepPlan(admit=[], preempted=[], copies=[],
+                        active=np.zeros(self.max_slots, bool),
+                        granted=np.zeros(self.max_slots, np.int32))
+        max_active = self._max_active()
+        bs = self.pool.block_size
+
+        # 1) reserve decode capacity for the oldest running sequences,
+        #    preempting youngest-first at the watermark.
+        n_active = 0
+        for rank, i in enumerate(self._occupied_oldest_first(slots)):
+            if slots[i] is None:
+                continue                        # preempted above
+            if n_active >= max_active:
+                continue                        # paused: over token budget
+            req = slots[i]
+            target = min(int(lens[i]) + self.lookahead, self.max_seq)
+            # The oldest sequence may dip into the watermark headroom —
+            # that headroom exists to protect *its* growth.
+            floor = 0 if rank == 0 else self.watermark
+            ok = False
+            while True:
+                try:
+                    # blocks_needed counts COW copies too, so the floor
+                    # check can't be sidestepped by a forked tail block.
+                    need = self.pool.blocks_needed(req.rid, target)
+                    if need > 0 and (self.pool.free_blocks - need < floor):
+                        raise PoolExhausted("watermark")
+                    _, copies = self.pool.reserve(req.rid, target)
+                    plan.copies.extend(copies)
+                    ok = True
+                    break
+                except PoolExhausted:
+                    victim = self._youngest(slots)
+                    if victim is not None and victim != i:
+                        self._preempt(victim, slots, queue, plan)
+                        continue
+                    # No younger victim: shrink to what fits instead of
+                    # preempting ourselves (which could never help).
+                    usable = max(self.pool.free_blocks - floor, 0)
+                    cur = len(self.pool.block_table(req.rid))
+                    shrunk = min(target, (cur + usable) * bs)
+                    if shrunk >= target:
+                        break   # can't shrink further (e.g. COW starved)
+                    target = shrunk
+            granted = min(self.pool.capacity(req.rid), self.max_seq)
+            plan.granted[i] = granted
+            if ok and granted > int(lens[i]):
+                plan.active[i] = True
+                n_active += 1
+
+        # 2) FIFO admission while slots, blocks, and token budget allow.
+        free_slots = deque(i for i in range(self.max_slots)
+                           if slots[i] is None)
+        while queue and free_slots and n_active < max_active:
+            req = queue[0]
+            prefix = prefix_len_of(req)
+            target = min(prefix + self.lookahead, self.max_seq)
+            # An idle engine admits on raw free blocks (progress beats
+            # headroom when nothing is running to free any).
+            if not self.can_admit(prefix, all(s is None for s in slots)):
+                break                           # head-of-line: stay FIFO
+            queue.popleft()
+            slot = free_slots.popleft()
+            self.pool.alloc(req.rid, prefix)
+            self.pool.reserve(req.rid, target)
+            slots[slot] = req
+            self._order[slot] = self._admit_seq
+            self._admit_seq += 1
+            self.admissions += 1
+            plan.admit.append((slot, req))
+            plan.granted[slot] = min(self.pool.capacity(req.rid),
+                                     self.max_seq)
+            plan.active[slot] = True
+            n_active += 1
+        return plan
+
+    def release(self, rid: int) -> None:
+        """A sequence finished: return its blocks to the pool."""
+        self.pool.free(rid)
+
+    def slot_released(self, slot: int) -> None:
+        self._order[slot] = -1

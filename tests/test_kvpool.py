@@ -1,0 +1,155 @@
+"""KVPool invariants: alloc/extend/free round-trips, deterministic
+allocation order, refcount/COW fork semantics, double-free guards, and
+the occupancy/fragmentation stats the scheduler and balancer consume."""
+import pytest
+
+from repro.serve.kvpool import KVPool, PoolExhausted
+
+
+def test_alloc_free_roundtrip():
+    pool = KVPool(num_blocks=8, block_size=4)
+    t = pool.alloc(0, 10)                 # 3 blocks
+    assert t == [0, 1, 2]
+    assert pool.free_blocks == 5
+    assert pool.seq_len(0) == 10
+    pool.free(0)
+    assert pool.free_blocks == 8
+    assert not pool.has_seq(0)
+    # freed blocks are reused lowest-id-first (deterministic)
+    assert pool.alloc(1, 4) == [0]
+
+
+def test_deterministic_allocation_order():
+    pool = KVPool(num_blocks=8, block_size=4)
+    a = pool.alloc(0, 8)      # [0, 1]
+    b = pool.alloc(1, 8)      # [2, 3]
+    c = pool.alloc(2, 8)      # [4, 5]
+    assert (a, b, c) == ([0, 1], [2, 3], [4, 5])
+    pool.free(1)              # 2, 3 return
+    pool.free(0)              # 0, 1 return
+    # next alloc takes the lowest free ids regardless of free order
+    assert pool.alloc(3, 12) == [0, 1, 2]
+
+
+def test_extend_allocates_only_new_blocks():
+    pool = KVPool(num_blocks=8, block_size=4)
+    pool.alloc(0, 3)                      # 1 block, partially filled
+    new, copies = pool.extend(0, 4)       # still inside block 0
+    assert new == [] and copies == []
+    new, copies = pool.extend(0, 9)       # needs 2 more
+    assert len(new) == 2 and copies == []
+    assert pool.block_table(0) == [0, 1, 2]
+    assert pool.seq_len(0) == 9
+    # shrink/no-op extends change nothing
+    assert pool.extend(0, 5) == ([], [])
+    assert pool.seq_len(0) == 9
+
+
+def test_reserve_vs_advance_split():
+    """reserve grows capacity without counting tokens as written (the
+    scheduler's lookahead); advance records actual writes; stats report
+    the gap as fragmentation."""
+    pool = KVPool(num_blocks=8, block_size=4)
+    pool.alloc(0, 3)
+    new, copies = pool.reserve(0, 10)         # 2 extra blocks reserved
+    assert len(new) == 2 and copies == []
+    assert pool.seq_len(0) == 3               # written length unchanged
+    assert pool.capacity(0) == 12
+    assert pool.stats().fragmentation == pytest.approx(1 - 3 / 12)
+    pool.advance(0, 10)
+    assert pool.seq_len(0) == 10
+    assert pool.stats().fragmentation == pytest.approx(1 - 10 / 12)
+    with pytest.raises(ValueError):
+        pool.advance(0, 13)                   # beyond reserved capacity
+    pool.advance(0, 5)                        # never shrinks
+    assert pool.seq_len(0) == 10
+
+
+def test_exhaustion_is_atomic():
+    pool = KVPool(num_blocks=4, block_size=4)
+    pool.alloc(0, 12)                     # 3 blocks
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1, 8)                  # needs 2, only 1 free
+    assert pool.free_blocks == 1          # nothing leaked
+    with pytest.raises(PoolExhausted):
+        pool.extend(0, 24)                # needs 3 more
+    assert pool.block_table(0) == [0, 1, 2]
+    assert pool.seq_len(0) == 12
+
+
+def test_fork_shares_blocks_and_cow_on_write():
+    pool = KVPool(num_blocks=8, block_size=4)
+    pool.alloc(0, 6)                      # blocks [0, 1], block 1 partial
+    child = pool.fork(0, 1)
+    assert child == [0, 1]                # shared prefix cached once
+    assert pool.free_blocks == 6          # fork allocates nothing
+    # the child's next write lands in shared partial block 1 -> COW
+    new, copies = pool.extend(1, 7)
+    assert copies == [(1, 2)]             # copy old tail into fresh block
+    assert new == []                      # still inside the (new) tail block
+    assert pool.block_table(1) == [0, 2]
+    assert pool.block_table(0) == [0, 1]  # parent untouched
+    assert pool.free_blocks == 5          # COW consumed one block
+    # block 0 stays shared: freeing the child keeps it live
+    pool.free(1)
+    assert pool.free_blocks == 6          # only block 2 returned
+    pool.free(0)
+    assert pool.free_blocks == 8
+
+
+def test_cow_covers_every_shared_block_in_write_range():
+    """Regression: a reservation spanning multiple already-allocated
+    shared blocks (forked child of a parent with lookahead reservation)
+    must COW ALL of them, not just the tail block."""
+    pool = KVPool(num_blocks=16, block_size=4)
+    pool.alloc(0, 6)
+    pool.reserve(0, 12)                   # parent table [0, 1, 2]
+    pool.fork(0, 1)
+    new, copies = pool.extend(1, 11)      # child writes positions 6..10
+    # blocks 1 (pos 4-7) and 2 (pos 8-11) are written -> both COW'd;
+    # block 0 (pos 0-3) is read-only and stays shared
+    assert sorted(c[0] for c in copies) == [1, 2]
+    assert new == []
+    child = pool.block_table(1)
+    parent = pool.block_table(0)
+    assert child[0] == parent[0] == 0
+    assert child[1] != parent[1] and child[2] != parent[2]
+    pool.free(0)
+    pool.free(1)
+    assert pool.free_blocks == 16
+
+
+def test_cow_skipped_on_block_boundary():
+    """A fork whose next write starts a brand-new block needs no copy."""
+    pool = KVPool(num_blocks=8, block_size=4)
+    pool.alloc(0, 8)                      # exactly 2 full blocks
+    pool.fork(0, 1)
+    new, copies = pool.extend(1, 9)
+    assert copies == []                   # nothing shared is written
+    assert len(new) == 1
+
+
+def test_double_free_raises():
+    pool = KVPool(num_blocks=4, block_size=4)
+    pool.alloc(0, 4)
+    pool.free(0)
+    with pytest.raises(KeyError):
+        pool.free(0)
+    pool.alloc(2, 4)
+    with pytest.raises(ValueError):
+        pool.alloc(2, 4)                  # re-alloc of a live sid
+
+
+def test_stats_occupancy_and_fragmentation():
+    pool = KVPool(num_blocks=10, block_size=8)
+    s = pool.stats()
+    assert s.occupancy == 0.0 and s.fragmentation == 0.0
+    pool.alloc(0, 9)                      # 2 blocks for 9 tokens
+    s = pool.stats()
+    assert s.live_blocks == 2 and s.free_blocks == 8
+    assert s.occupancy == pytest.approx(0.2)
+    assert s.fragmentation == pytest.approx(1 - 9 / 16)
+    pool.extend(0, 16)                    # fills both blocks exactly
+    assert pool.stats().fragmentation == 0.0
+    pool.free(0)
+    assert pool.stats().occupancy == 0.0

@@ -1,0 +1,177 @@
+"""Paged serving contract: the paged engine (block pool + scheduler +
+paged decode) must emit exactly what the contiguous engine emits under
+greedy sampling — across mixed per-slot lengths, forced preemption and
+resume, and per-step token budgets — while packing more sequences into
+the same cache memory. Plus the balancer satellites: FIFO steals and
+capacity-based hunger."""
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import init_lm
+from repro.serve.engine import Engine, GLBReplicaBalancer, Request
+
+CFG = ARCHS["tinyllama-1.1b"].smoke()
+PARAMS = init_lm(jax.random.key(0), CFG)
+
+
+def _reqs(n=5, max_new=10):
+    # mixed budgets => mixed final lengths across slots
+    return [Request(rid=i, prompt=[3, i + 1, 4, 2], max_new=max_new + i % 4)
+            for i in range(n)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    guard = 0
+    while engine.load > 0 and guard < 500:
+        engine.step()
+        guard += 1
+    assert all(r.done for r in reqs)
+    return [list(r.out) for r in reqs]
+
+
+def _contiguous_baseline(reqs_fn, **kw):
+    e = Engine(CFG, PARAMS, **kw)
+    return _run(e, reqs_fn())
+
+
+def test_paged_matches_contiguous_greedy():
+    kw = dict(max_slots=2, max_seq=64, pad_len=8, steps_per_sync=8)
+    out_c = _contiguous_baseline(_reqs, **kw)
+    e_p = Engine(CFG, PARAMS, paged=True, **kw)
+    out_p = _run(e_p, _reqs())
+    assert out_c == out_p
+    # everything released: pool drains to empty
+    assert e_p.pool.free_blocks == e_p.pool.num_blocks
+    assert e_p.sched.preemptions == 0
+
+
+def test_paged_preempt_and_resume_token_identical():
+    """A pool too small for both sequences' growth forces watermark
+    preemption; resume-by-recompute must keep greedy outputs identical
+    to the never-preempted contiguous run."""
+    kw = dict(max_slots=2, max_seq=32, pad_len=8, steps_per_sync=8)
+    out_c = _contiguous_baseline(lambda: _reqs(5, 14), **kw)
+    e_t = Engine(CFG, PARAMS, paged=True, block_size=8, num_blocks=5, **kw)
+    out_t = _run(e_t, _reqs(5, 14))
+    assert e_t.sched.preemptions > 0, "pool sizing must force preemption"
+    assert out_t == out_c
+    assert e_t.pool.free_blocks == 5
+
+
+def test_watermark_starved_pool_stays_live():
+    """Regression: a sole sequence whose growth collides with the
+    watermark must keep decoding via partial reservations (it must never
+    preempt itself into a permanent admit/preempt loop)."""
+    kw = dict(max_slots=2, max_seq=64, pad_len=8, steps_per_sync=8)
+    req_c = Request(rid=0, prompt=[3, 1, 4, 2], max_new=60)
+    e_c = Engine(CFG, PARAMS, **kw)
+    out_c = _run(e_c, [req_c])
+    # pool of exactly max_blocks, watermark 1: full lookahead reservation
+    # is impossible near max_seq.
+    e_p = Engine(CFG, PARAMS, paged=True, block_size=8, num_blocks=8,
+                 watermark_blocks=1, **kw)
+    req_p = Request(rid=0, prompt=[3, 1, 4, 2], max_new=60)
+    out_p = _run(e_p, [req_p])
+    assert out_p == out_c
+
+
+def test_paged_token_budget_paces_slots():
+    """token_budget < slots * steps_per_sync pauses the youngest slots
+    each step without changing any sequence's tokens."""
+    kw = dict(max_slots=2, max_seq=32, pad_len=8, steps_per_sync=8)
+    out_c = _contiguous_baseline(lambda: _reqs(4, 12), **kw)
+    e_b = Engine(CFG, PARAMS, paged=True, token_budget=8, **kw)
+    out_b = _run(e_b, _reqs(4, 12))
+    assert out_b == out_c
+
+
+def test_paged_packs_more_sequences_at_fixed_memory():
+    """With the same number of KV rows, the paged engine runs more
+    sequences concurrently than the contiguous engine has slots."""
+    max_seq, rows = 64, 4 * 64            # contiguous: 4 slots x 64 rows
+    e_c = Engine(CFG, PARAMS, max_slots=4, max_seq=max_seq, pad_len=8,
+                 steps_per_sync=4)
+    reqs_c = _reqs(12, 8)
+    _run(e_c, reqs_c)
+    assert e_c.peak_running == 4
+    bs = 8
+    e_p = Engine(CFG, PARAMS, max_slots=rows // bs, max_seq=max_seq,
+                 pad_len=8, steps_per_sync=4, paged=True, block_size=bs,
+                 num_blocks=rows // bs)   # same rows of KV memory
+    reqs_p = _reqs(12, 8)
+    _run(e_p, reqs_p)
+    assert e_p.peak_running >= 2 * e_c.peak_running
+    # and the tokens are still identical per request
+    assert [r.out for r in reqs_p] == [r.out for r in reqs_c]
+
+
+def test_scheduler_exports_occupancy():
+    e = Engine(CFG, PARAMS, max_slots=2, max_seq=32, pad_len=8,
+               steps_per_sync=4, paged=True, block_size=8)
+    assert e.pool_occupancy == 0.0
+    for r in _reqs(2, 8):
+        e.submit(r)
+    e.step()
+    assert 0.0 < e.pool_occupancy <= 1.0
+    s = e.pool.stats()
+    assert s.live_blocks == s.num_blocks - s.free_blocks
+    while e.load > 0:
+        e.step()
+    assert e.pool_occupancy == 0.0
+
+
+# --------------------------------------------------------------- balancer
+def test_balancer_steals_oldest_first():
+    """Stolen requests must leave the victim's queue in arrival order
+    (FIFO), not inverted from the tail."""
+    engines = [Engine(CFG, PARAMS, max_slots=1, max_seq=32, pad_len=8,
+                      steps_per_sync=4) for _ in range(2)]
+    bal = GLBReplicaBalancer(engines)
+    reqs = _reqs(6, 6)
+    for r in reqs:
+        bal.submit(r, rr=0)               # adversarial: all on replica 0
+    bal.balance()
+    assert bal.moves > 0
+    stolen = [r.rid for r in engines[1].queue]
+    assert stolen == sorted(stolen), "steals must preserve arrival order"
+    remaining = [r.rid for r in engines[0].queue]
+    assert remaining == sorted(remaining)
+    # the thief got the OLDEST requests, not the newest
+    assert stolen and stolen[0] == min(r.rid for r in reqs)
+
+
+def test_balancer_hungry_on_free_capacity_not_total_idleness():
+    """A replica with a running slot but spare capacity must steal; one
+    with no free slots must not."""
+    engines = [Engine(CFG, PARAMS, max_slots=2, max_seq=32, pad_len=8,
+                      steps_per_sync=4) for _ in range(2)]
+    bal = GLBReplicaBalancer(engines)
+    # occupy ONE slot of replica 1 -> still hungry (a free slot remains)
+    busy = Request(rid=100, prompt=[3, 5, 4, 2], max_new=30)
+    engines[1].submit(busy)
+    engines[1].step()
+    assert engines[1].load > 0            # not idle -- old rule: not hungry
+    assert engines[1].can_accept()
+    for r in _reqs(6, 6):
+        bal.submit(r, rr=0)
+    bal.balance()
+    assert bal.moves > 0, "partially-busy replica with capacity must steal"
+
+
+def test_balancer_completes_all_requests_paged():
+    """End-to-end: paged replicas + balancer drain an adversarial queue;
+    pool pressure feeds hunger via can_accept."""
+    engines = [Engine(CFG, PARAMS, max_slots=2, max_seq=32, pad_len=8,
+                      steps_per_sync=4, paged=True, block_size=8)
+               for _ in range(2)]
+    bal = GLBReplicaBalancer(engines)
+    reqs = _reqs(10, 6)
+    for r in reqs:
+        bal.submit(r, rr=0)
+    bal.run(max_steps=300)
+    assert all(r.done for r in reqs)
+    assert bal.moves > 0
+    assert all(e.pool.free_blocks == e.pool.num_blocks for e in engines)
