@@ -2,7 +2,11 @@
 legacy per-token decode loop vs the jitted multi-step ``lax.fori_loop``
 engine (on-device sampling, one host drain per N positions), plus the
 paged KV pool vs contiguous slots — same-workload tokens/s and max
-concurrent sequences at fixed cache memory (the paged packing win).
+concurrent sequences at fixed cache memory (the paged packing win) —
+plus the PR 4 policy layer: the shared-system-prompt workload (radix
+prefix cache: hit rate and prefill tokens saved) and TTFT p50/p99 for
+short requests arriving behind long-prompt admissions, with and without
+chunked prefill.
 
 Steady-state measurement: all slots admitted and kernels compiled before
 the timer starts, so the numbers isolate the engine decode loop itself.
@@ -15,6 +19,7 @@ import dataclasses
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import init_lm
@@ -26,6 +31,14 @@ MAX_SEQ = 128
 SLOTS = 4
 PAGED_BS = 8                      # pool block size (tokens)
 SHORT_MAX_NEW = 16                # packing workload: short requests
+
+# shared-prefix workload: a long system prompt every request begins with
+SYS_PROMPT = [(7 * k + 3) % 250 + 1 for k in range(40)]
+PREFIX_PAD = 64                   # prompt bucket for the prefix workload
+N_PREFIX_REQS = 16
+# TTFT workload: short requests arriving behind long-prompt admissions
+TTFT_LONG_PROMPT = [(5 * k + 2) % 250 + 1 for k in range(120)]
+TTFT_CHUNK = 16
 
 
 def _bench_cfg():
@@ -75,6 +88,103 @@ def _drive_packing(engine, n_reqs):
     return (engine.tokens_out - toks0) / dt, engine.peak_running
 
 
+def _drive_prefix(engine, n_reqs):
+    """Shared-system-prompt workload: every request = SYS_PROMPT + a short
+    unique tail. One warm-up request compiles the miss and hit paths and
+    seeds the cache (the steady-state a shared system prompt lives in),
+    then counters reset and the timed wave runs. Returns
+    (tokens/s, prefill tokens saved fraction)."""
+    for wid in (10_000, 10_001):    # first = miss path, second = hit path
+        engine.submit(Request(rid=wid, prompt=SYS_PROMPT + [wid % 250, 5, 7],
+                              max_new=2))
+        while engine.load > 0:
+            engine.step()
+    if engine.prefix_cache is not None:
+        c = engine.prefix_cache
+        c.hits = c.misses = c.tokens_reused = 0
+    reqs = [Request(rid=r, prompt=SYS_PROMPT + [r % 250 + 1, 5, 7],
+                    max_new=SHORT_MAX_NEW) for r in range(n_reqs)]
+    for r in reqs:
+        engine.submit(r)
+    toks0 = engine.tokens_out
+    t0 = time.time()
+    while engine.load > 0:
+        engine.step()
+    dt = time.time() - t0
+    total_prefix = sum(min(len(r.prompt), engine.pad_len) for r in reqs)
+    saved = (engine.prefix_cache.tokens_reused / total_prefix
+             if engine.prefix_cache is not None else 0.0)
+    return (engine.tokens_out - toks0) / dt, saved
+
+
+def _drive_ttft(engine):
+    """Staggered arrivals: a stream of short requests with long-prompt
+    requests landing mid-stream. TTFT = wall-clock from submit to first
+    output token, reported for the SHORT requests (the ones a monolithic
+    long prefill starves — the long request itself legitimately pays for
+    its own chunking). max_prefill_tokens is the largest single-step
+    prefill the engine ever ran — THE quantity chunking bounds (on this
+    deliberately tiny CPU model, per-step dispatch overhead swamps
+    prefill compute, so the wall-clock columns mostly show that
+    overhead; on a real model the per-step work bound is what keeps
+    decode latency flat). Returns (short p50 ms, short p99 ms,
+    max step ms, max prefill tokens in one step)."""
+    schedule = []                   # (arrival_step, request, is_short)
+    rid = 0
+    for s in range(24):
+        if s % 8 == 3:
+            schedule.append((s, Request(
+                rid=rid, prompt=list(TTFT_LONG_PROMPT), max_new=4), False))
+            rid += 1
+        schedule.append((s, Request(
+            rid=rid, prompt=[3, rid % 250 + 1, 4], max_new=4), True))
+        rid += 1
+    # Warm-up outside the timer: same prompt shapes as the schedule, so
+    # every prefill/chunk/decode trace is compiled before TTFT is measured.
+    for req in (Request(rid=10_000, prompt=list(TTFT_LONG_PROMPT),
+                        max_new=2),
+                Request(rid=10_001, prompt=[3, 5, 4], max_new=2)):
+        engine.submit(req)
+    while engine.load > 0:
+        engine.step()
+    per_step_prefill = {}
+    orig_chunk = engine._run_prefill_chunk
+
+    def spy(slot, req, start, end, last):
+        per_step_prefill[engine.steps] = (
+            per_step_prefill.get(engine.steps, 0) + (end - start)
+        )
+        return orig_chunk(slot, req, start, end, last)
+
+    engine._run_prefill_chunk = spy
+    submit_t, first_t = {}, {}
+    pending = list(schedule)
+    step, max_step = 0, 0.0
+    while pending or engine.load > 0:
+        while pending and pending[0][0] <= step:
+            _, req, _ = pending.pop(0)
+            submit_t[req.rid] = time.time()
+            engine.submit(req)
+        t0 = time.time()
+        engine.step()
+        max_step = max(max_step, time.time() - t0)
+        now = time.time()
+        for _, req, _ in schedule:
+            if req.rid not in first_t and req.out:
+                first_t[req.rid] = now
+        step += 1
+        if step > 5000:
+            break
+    shorts = [
+        1e3 * (first_t[req.rid] - submit_t[req.rid])
+        for _, req, is_short in schedule
+        if is_short and req.rid in first_t
+    ]
+    return (float(np.percentile(shorts, 50)),
+            float(np.percentile(shorts, 99)), 1e3 * max_step,
+            max(per_step_prefill.values(), default=0))
+
+
 def run():
     cfg = _bench_cfg()
     params = init_lm(jax.random.key(0), cfg)
@@ -120,6 +230,34 @@ def run():
         lambda e: _drive_packing(e, n_reqs),
     )
 
+    # Shared-system-prompt workload: identical engine/pool, prefix cache
+    # off vs on. "saved" = fraction of prefill positions served from
+    # cached blocks instead of recomputed.
+    pool_kw = dict(max_slots=SLOTS, max_seq=MAX_SEQ, pad_len=PREFIX_PAD,
+                   steps_per_sync=STEPS_PER_SYNC, paged=True,
+                   block_size=PAGED_BS, num_blocks=rows // PAGED_BS)
+    tps_nc, _ = _best_of(lambda: Engine(cfg, params, **pool_kw),
+                         lambda e: _drive_prefix(e, N_PREFIX_REQS))
+    (tps_cache, saved) = _best_of(
+        lambda: Engine(cfg, params, prefix_cache=True, **pool_kw),
+        lambda e: _drive_prefix(e, N_PREFIX_REQS),
+    )
+
+    # TTFT with and without chunked prefill. Both arms run the chunk-mode
+    # admission path with pad_len = MAX_SEQ (the 120-token prompt must
+    # not be bucket-truncated). The baseline admits each prompt as ONE
+    # monolithic chunk with no token budget (pre-chunking behavior:
+    # unbounded per-step prefill); the chunked arm bounds every step by
+    # the shared token budget.
+    ttft_kw = dict(pool_kw, pad_len=MAX_SEQ)
+    p50_nc_t, p99_nc_t, step_nc, pf_nc = _drive_ttft(
+        Engine(cfg, params, prefill_chunk=MAX_SEQ, **ttft_kw)
+    )
+    p50_ck, p99_ck, step_ck, pf_ck = _drive_ttft(
+        Engine(cfg, params, prefill_chunk=TTFT_CHUNK,
+               token_budget=SLOTS * STEPS_PER_SYNC, **ttft_kw)
+    )
+
     # syncs per decoded *position* is the architectural constant: the
     # legacy loop drains every position (1.0), the fori_loop engine drains
     # once per steps_per_sync positions.
@@ -142,6 +280,23 @@ def run():
          f"tok_s={tps_pp:.1f};max_concurrent={conc_p};"
          f"hbm_rows={rows};concurrency_gain="
          f"{conc_p / max(conc_c, 1):.1f}x"),
+        ("serve_prefix_cache", 1e6 / max(tps_cache, 1e-9),
+         f"tok_s={tps_cache:.1f};vs_no_cache="
+         f"{tps_cache / max(tps_nc, 1e-9):.2f}x;"
+         f"prefill_tokens_saved={saved:.0%};"
+         f"sys_prompt_len={len(SYS_PROMPT)};reqs={N_PREFIX_REQS}"),
+        ("serve_ttft_nochunk", 1e3 * p50_nc_t,
+         f"short_ttft_p50_ms={p50_nc_t:.1f};"
+         f"short_ttft_p99_ms={p99_nc_t:.1f};"
+         f"max_step_ms={step_nc:.1f};"
+         f"max_prefill_tokens_per_step={pf_nc};"
+         f"long_prompt={len(TTFT_LONG_PROMPT)}"),
+        ("serve_ttft_chunked", 1e3 * p50_ck,
+         f"short_ttft_p50_ms={p50_ck:.1f};short_ttft_p99_ms={p99_ck:.1f};"
+         f"max_step_ms={step_ck:.1f};"
+         f"max_prefill_tokens_per_step={pf_ck};chunk={TTFT_CHUNK};"
+         f"p99_vs_nochunk={p99_ck / max(p99_nc_t, 1e-9):.2f}x;"
+         f"max_step_vs_nochunk={step_ck / max(step_nc, 1e-9):.2f}x"),
     ]
 
 

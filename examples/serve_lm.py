@@ -4,10 +4,18 @@ replica 0; the balancer's lifeline matching redistributes them.
 
     PYTHONPATH=src python examples/serve_lm.py            # contiguous slots
     PYTHONPATH=src python examples/serve_lm.py --paged    # paged KV pool
+    PYTHONPATH=src python examples/serve_lm.py --paged --prefix-cache \
+        --prefill-chunk 8                                 # radix cache +
+                                                          # chunked prefill
 
 With ``--paged`` each replica runs the block-granular KV pool + the
 continuous-batching scheduler (admission, watermark preemption) and the
-exit report includes pool occupancy/fragmentation.
+exit report includes pool occupancy/fragmentation. ``--prefix-cache``
+adds the radix prefix cache — requests here share a system prompt, so
+later admissions fork the cached blocks instead of re-prefilling them —
+and the report gains hit-rate / prefill-tokens-saved lines.
+``--prefill-chunk N`` splits long prompt prefills into N-token chunks
+interleaved with decode.
 """
 import argparse
 import time
@@ -18,23 +26,33 @@ from repro.configs import ARCHS
 from repro.models import init_lm
 from repro.serve.engine import Engine, GLBReplicaBalancer, Request
 
+SYSTEM_PROMPT = [7, 3, 9, 2, 5, 8, 6, 4, 1, 2, 3, 4, 9, 9, 8, 7]
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true",
                     help="paged KV-cache pool + scheduler per replica")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache (requires --paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill budget (requires --paged)")
     args = ap.parse_args()
 
     cfg = ARCHS["tinyllama-1.1b"].smoke()
     params = init_lm(jax.random.key(0), cfg)
-    kw = dict(max_slots=2, max_seq=64, pad_len=8)
+    kw = dict(max_slots=2, max_seq=64, pad_len=32)
     if args.paged:
-        kw.update(paged=True, block_size=8)
+        kw.update(paged=True, block_size=8,
+                  prefix_cache=args.prefix_cache,
+                  prefill_chunk=args.prefill_chunk)
+    elif args.prefix_cache or args.prefill_chunk:
+        ap.error("--prefix-cache / --prefill-chunk require --paged")
     engines = [Engine(cfg, params, **kw) for _ in range(2)]
     bal = GLBReplicaBalancer(engines)
 
     reqs = [
-        Request(rid=i, prompt=[2 + i, 7, 11, (3 * i) % cfg.vocab],
+        Request(rid=i, prompt=SYSTEM_PROMPT + [2 + i, 7, (3 * i) % cfg.vocab],
                 max_new=6 + (i % 5))
         for i in range(10)
     ]
@@ -47,6 +65,10 @@ def main():
     assert all(r.done for r in reqs)
     total = sum(e.tokens_out for e in engines)
     mode = "paged" if args.paged else "contiguous"
+    if args.prefix_cache:
+        mode += "+prefix-cache"
+    if args.prefill_chunk:
+        mode += f"+chunk{args.prefill_chunk}"
     print(f"[{mode}] completed {len(reqs)} requests, {total} tokens "
           f"in {dt:.1f}s")
     for i, e in enumerate(engines):
@@ -58,6 +80,15 @@ def main():
                      f"{e.sched.admissions} admissions, "
                      f"{e.sched.preemptions} preemptions")
         print(line)
+        if args.paged and e.prefix_cache is not None:
+            c = e.prefix_cache
+            print(f"    prefix cache: {c.hits} hits / {c.misses} misses "
+                  f"(hit rate {c.hit_rate:.0%}), "
+                  f"{c.tokens_reused} prefill tokens saved, "
+                  f"{c.evictions} evictions, "
+                  f"{e.pool.cached_blocks} blocks cached now")
+        if args.paged and e.sched.chunks_scheduled:
+            print(f"    chunked prefill: {e.sched.chunks_scheduled} chunks")
     print(f"GLB moves: {bal.moves} (queued requests stolen by hungry "
           f"replica)")
     for r in reqs[:3]:

@@ -52,7 +52,8 @@ def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     if shape.name.startswith("long") and not cfg.supports_long_context:
         return False, (
             "skipped: pure full-attention arch — a 524288-token KV cache "
-            "decode is reserved for ssm/hybrid archs per spec (DESIGN.md §9)"
+            "decode is reserved for ssm/hybrid archs per spec "
+            "(DESIGN.md §10)"
         )
     return True, ""
 

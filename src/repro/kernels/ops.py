@@ -10,7 +10,7 @@ import jax
 from . import ref
 from .flash_attention import flash_attention
 from .flash_decode import flash_decode
-from .paged_decode import paged_decode
+from .paged_decode import paged_decode, paged_prefill
 from .mamba2_ssd import ssd_chunked
 from .moe_gmm import gmm as gmm_pallas
 from .uts_expand import uts_expand
@@ -22,7 +22,7 @@ def _on_tpu() -> bool:
 
 def attention(q, k, v, *, causal=True, scale=None, impl: str = "auto",
               block_q: int = 128, block_k: int = 128, lengths=None,
-              block_tables=None):
+              block_tables=None, q_offset=None):
     """impl: auto | pallas | pallas_interpret | ref | chunked
           | decode | decode_interpret | decode_ref
           | paged | paged_interpret | paged_ref
@@ -39,8 +39,21 @@ def attention(q, k, v, *, causal=True, scale=None, impl: str = "auto",
     impl spelling is normalized so one config knob drives contiguous and
     paged decode alike — the window mask and table walk are never
     dropped.
+
+    `q_offset` ((B,) i32, paged only) marks the call as a *chunked
+    prefill*: q holds Sq tokens at absolute positions
+    ``[q_offset, q_offset + Sq)`` attending causally to the pool window
+    ``[0, lengths)`` — the kernel/oracle pair that lets a long admission
+    prefill in budget-sized chunks against blocks earlier chunks (or a
+    prefix-cache hit) already wrote.
     """
-    if lengths is not None and q.shape[1] != 1:
+    if q_offset is not None and block_tables is None:
+        raise ValueError(
+            "q_offset is a paged chunked-prefill parameter and requires "
+            "block_tables; the contiguous paths would silently ignore "
+            "the offset and compute wrong attention"
+        )
+    if lengths is not None and q.shape[1] != 1 and block_tables is None:
         raise ValueError(
             f"lengths is only supported for Sq == 1 decode, got Sq="
             f"{q.shape[1]}; dropping the window mask would silently "
@@ -59,6 +72,19 @@ def attention(q, k, v, *, causal=True, scale=None, impl: str = "auto",
             "decode_interpret": "paged_interpret",
             "decode_ref": "paged_ref",
         }.get(impl, impl)
+        if q_offset is not None or q.shape[1] != 1:
+            if q_offset is None:
+                raise ValueError(
+                    "paged attention with Sq > 1 is chunked prefill and "
+                    "requires q_offset (the chunk's start position)"
+                )
+            if impl == "paged_ref":
+                return ref.paged_prefill_ref(q, k, v, block_tables,
+                                             lengths, q_offset, scale=scale)
+            assert impl in ("paged", "paged_interpret"), impl
+            return paged_prefill(q, k, v, block_tables, lengths, q_offset,
+                                 scale=scale,
+                                 interpret=(impl == "paged_interpret"))
         if impl == "paged_ref":
             return ref.paged_decode_ref(q, k, v, block_tables, lengths,
                                         scale=scale)

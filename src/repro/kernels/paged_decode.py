@@ -1,5 +1,8 @@
 """Paged split-KV Pallas flash-decode kernel: one query token against a
-block-table-indirected KV pool (Sq == 1, the paged serving hot path).
+block-table-indirected KV pool (Sq == 1, the paged serving hot path) —
+plus ``paged_prefill``, the same block walk for a *chunk* of Sq query
+tokens at offset ``q_offset`` (chunked prefill: tokens ``[s, e)``
+attending causally to pool blocks ``[0, e)``).
 
 flash_decode.py streams a *contiguous* per-slot cache; here the cache is
 a flat pool of KV blocks shared by every sequence (serve/kvpool.py) and
@@ -25,6 +28,15 @@ kv-head index map (h // group) as everywhere else. Oracle:
 ``ref.paged_decode_ref`` (gather blocks -> decode_ref). Routed via
 ``ops.attention(..., block_tables=...)``; validated in interpret mode on
 CPU.
+
+``paged_prefill`` generalizes the decode kernel to an (Sq, D) query
+block and a third scalar-prefetch operand ``q_offset`` ((B,) i32 chunk
+start): the mask becomes causal-by-absolute-position
+(``kpos <= q_offset + i``) intersected with the ``lengths`` window, the
+online-softmax scratch grows to (Sq, 1)/(Sq, D), and everything else —
+table walk, DMA clamp, block skip, lane mask, GQA — is unchanged.
+Oracle: ``ref.paged_prefill_ref``; routed via
+``ops.attention(..., block_tables=..., q_offset=...)``.
 """
 from __future__ import annotations
 
@@ -142,3 +154,116 @@ def paged_decode(q, k_pool, v_pool, block_tables, lengths, *,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(bt, lens, q, k_pool, v_pool)
+
+
+def _paged_prefill_kernel(bt_ref, len_ref, off_ref, q_ref, k_ref, v_ref,
+                          o_ref, acc_ref, m_ref, l_ref, *, scale,
+                          block_size, max_blocks, sq):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    n = len_ref[b]      # visible window: q_offset + true chunk length
+    off = off_ref[b]    # absolute position of query row 0
+
+    @pl.when(j * block_size < n)  # skip blocks wholly past the window
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)               # (Sq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)               # (Bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)               # (Bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                               # (Sq, Bs)
+        kpos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (sq, block_size), 1
+        )
+        qpos = off + jax.lax.broadcasted_iota(
+            jnp.int32, (sq, block_size), 0
+        )
+        # Causal by absolute position, clamped to the window; a kv block
+        # entirely after some query row leaves that row's lane mask all
+        # dead — p is re-zeroed below so its (m, l) stay untouched.
+        live = (kpos <= qpos) & (kpos < n)
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]                                     # (Sq, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(live, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                         # (Sq, 1)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+
+    @pl.when(j == max_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked row -> output 0
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill(q, k_pool, v_pool, block_tables, lengths, q_offset, *,
+                  scale: float | None = None, interpret: bool = False):
+    """Chunked-prefill attention against the paged pool: q (B, Sq, Hq, D)
+    holds the chunk's Sq query tokens whose absolute positions start at
+    ``q_offset`` ((B,) i32); k_pool/v_pool/(B, max_blocks) block_tables
+    as in paged_decode; lengths (B,) i32 is the visible window
+    ``q_offset + true_chunk_len`` (bucket-padded tail queries emit
+    garbage the caller discards). Returns (B, Sq, Hq, D)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, Sq, Hq, D = q.shape
+    NB, Bs, Hkv, _ = k_pool.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    max_blocks = block_tables.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(D)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    offs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+
+    def kv_map(b, h, j, bt, lens, offs):
+        # Same walk/clamp as decode: past-window logical blocks repeat
+        # the last live physical block (no DMA, compute skipped).
+        last = jnp.maximum(lens[b] - 1, 0) // Bs
+        phys = bt[b, jnp.minimum(j, last)]
+        return (jnp.clip(phys, 0, NB - 1), 0, h // group, 0)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, scale=scale, block_size=Bs,
+        max_blocks=max_blocks, sq=Sq,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hq, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Sq, 1, D),
+                         lambda b, h, j, bt, lens, offs: (b, 0, h, 0)),
+            pl.BlockSpec((1, Bs, 1, D), kv_map),
+            pl.BlockSpec((1, Bs, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, Sq, 1, D), lambda b, h, j, bt, lens, offs: (b, 0, h, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((Sq, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((Sq, 1), jnp.float32),   # running max
+            pltpu.VMEM((Sq, 1), jnp.float32),   # running denominator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(bt, lens, offs, q, k_pool, v_pool)

@@ -88,6 +88,44 @@ def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths,
     return decode_ref(q, k, v, lengths, scale=scale)
 
 
+def paged_prefill_ref(q, k_pool, v_pool, block_tables, lengths, q_offset,
+                      scale: float | None = None):
+    """Chunked-prefill attention against the paged pool (the
+    paged_prefill oracle): queries are tokens ``[s, s + Sq)`` of a
+    sequence whose KV for ``[0, s + Sq)`` already sits in pool blocks
+    (earlier chunks / a prefix-cache hit, plus this chunk's own rows,
+    written by the caller before attending). Causal: query ``i`` sees
+    key positions ``<= q_offset + i``, additionally clamped to the
+    ``lengths`` window so bucket-padded tail queries read no stale rows.
+
+    q (B,Sq,Hq,hd); k_pool/v_pool (num_blocks, Bs, Hkv, hd);
+    block_tables (B, max_blocks) i32; lengths (B,) i32 visible window
+    (= q_offset + true chunk length); q_offset (B,) i32 chunk start."""
+    B, Sq, Hq, hd = q.shape
+    NB, Bs, Hkv, _ = k_pool.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    bt = jnp.clip(jnp.asarray(block_tables, jnp.int32), 0, NB - 1)
+    k = k_pool[bt].reshape(B, -1, Hkv, hd)      # logical order gather
+    v = v_pool[bt].reshape(B, -1, Hkv, hd)
+    S = k.shape[1]
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    offs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    kx = jnp.repeat(k, group, axis=2).astype(jnp.float32)
+    vx = jnp.repeat(v, group, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kx) * scale
+    qpos = offs[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]  # (B,Sq)
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    mask = (kpos[None, None, :] <= qpos[:, :, None]) & (
+        kpos[None, None, :] < lens[:, None, None]
+    )                                                                # (B,Sq,S)
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    return out.astype(q.dtype)
+
+
 def attention_chunked(q, k, v, causal: bool = True, scale: float | None = None,
                       block_q: int = 512):
     """Memory-bounded attention: lax.map over q blocks, full kv per block

@@ -122,6 +122,32 @@ def attn_fwd(
                 impl=cfg.decode_impl, lengths=window,
             ).astype(dt)
             new_cache = {"k": ck, "v": cv}
+    elif mode == "prefill" and block_tables is not None:
+        # Chunked prefill against the paged pool: this call holds tokens
+        # [start, start + S) of the sequence; KV for [0, start) already
+        # sits in pool blocks (earlier chunks or a prefix-cache hit).
+        # Write the chunk's k/v through the block table, then attend over
+        # the whole window with causal-by-absolute-position masking
+        # (kernels paged_prefill / ref.paged_prefill_ref).
+        assert cache is not None
+        NB, Bs = cache["k"].shape[0], cache["k"].shape[1]
+        bt = jnp.asarray(block_tables, jnp.int32)
+        start = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+        pos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        phys = jnp.take_along_axis(bt, pos // Bs, axis=1)        # (B, S)
+        off = pos % Bs
+        ck = cache["k"].at[phys, off].set(
+            k.astype(cache["k"].dtype), mode="drop"
+        )
+        cv = cache["v"].at[phys, off].set(
+            v.astype(cache["v"].dtype), mode="drop"
+        )
+        o = ops.attention(
+            q, ck.astype(dt), cv.astype(dt), causal=True,
+            impl=cfg.decode_impl, lengths=start + S, block_tables=bt,
+            q_offset=start,
+        ).astype(dt)
+        new_cache = {"k": ck, "v": cv}
     else:
         import os
 

@@ -1,7 +1,9 @@
 """Serving substrate: continuous-batching engine (jitted fori_loop
 multi-token decode steps, on-device sampling, split-KV/paged flash-decode
-attention), paged KV-cache pool, admission/preemption scheduler, and the
-GLB replica balancer."""
+attention), paged KV-cache pool, radix prefix cache (shared-prefix KV
+reuse + chunked prefill), admission/preemption scheduler, and the GLB
+replica balancer."""
 from .engine import Engine, GLBReplicaBalancer, Request  # noqa: F401
 from .kvpool import KVPool, PoolExhausted, PoolStats  # noqa: F401
+from .radix import RadixPrefixCache  # noqa: F401
 from .scheduler import ContinuousBatchingScheduler, StepPlan  # noqa: F401

@@ -27,6 +27,17 @@ block_tables=)`). A preempted request resumes by recomputing its cache
 from prompt + generated-so-far, so greedy outputs are token-identical to
 an uninterrupted run.
 
+``prefix_cache=True`` adds the radix prefix cache (DESIGN.md §8): a
+finished sequence's full KV blocks stay in a radix tree over its tokens,
+a new admission forks the longest cached prefix (zero recompute, COW on
+the partial tail) and prefills only its suffix, and cached blocks are
+evicted LRU on pool pressure. ``prefill_chunk=N`` splits long prefills
+into N-token chunks charged against the step token budget and
+interleaved with decode (the ``paged_prefill`` kernel attends chunk
+[s, e) to pool window [0, e)), so a long admission no longer stalls
+co-scheduled decodes for one giant forward. Both features are
+attention-family only (recurrent conv/ssm state cannot be forked).
+
 The multi-replica balancer treats per-replica queue depth as the GLB size
 vector and moves queued requests from overloaded to hungry replicas with
 the same deterministic matching the task scheduler uses — the paper's
@@ -51,6 +62,7 @@ from repro.models import (decode_step, forward, make_cache,
 from repro.models.config import ModelConfig
 
 from .kvpool import KVPool
+from .radix import RadixPrefixCache
 from .scheduler import ContinuousBatchingScheduler
 
 
@@ -193,6 +205,27 @@ def _make_paged_fns(cfg: ModelConfig, max_seq: int, block_size: int,
     return prefill_paged, copy_block
 
 
+def _make_chunk_fn(cfg: ModelConfig, temperature: float):
+    """Chunked-prefill forward: tokens [start, start+C) of one sequence,
+    writing k/v straight into the pool blocks through the block table and
+    attending to the paged window [0, start+C) (paged_prefill kernel /
+    oracle). Chunk shapes are exact (no bucket padding), so this retraces
+    once per distinct chunk length. Returns the sampled token from the
+    chunk's last position — callers use it only on the final chunk."""
+    vocab = cfg.vocab
+
+    @jax.jit
+    def prefill_chunk(params, tokens, cache, bt, start, key):
+        logits, cache, _ = forward(
+            params, cfg, tokens=tokens, cache=cache, cache_len=start,
+            mode="prefill", block_tables=bt[None, :],
+        )
+        last = sample_tokens(logits[0, -1, ..., :vocab], key, temperature)
+        return last, cache
+
+    return prefill_chunk
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
                  max_seq: int = 256, pad_len: int = 32,
@@ -201,7 +234,9 @@ class Engine:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  watermark_blocks: int = 0,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -209,6 +244,7 @@ class Engine:
         self.pad_len = pad_len
         self.steps_per_sync = steps_per_sync
         self.paged = paged
+        self.prefix_cache = None       # set below for paged engines
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.lens = np.full(max_slots, -1, np.int32)    # -1 => idle slot
@@ -231,10 +267,22 @@ class Engine:
             assert self.num_blocks >= self.max_blocks, \
                 "pool must fit at least one full-length sequence"
             self.pool = KVPool(self.num_blocks, bs)
+            if prefix_cache or prefill_chunk is not None:
+                # Recurrent conv/ssm state is not block-addressable: a
+                # cached prefix (or an earlier chunk) carries hidden
+                # state the pool cannot fork, so prefix reuse and
+                # chunked prefill are attention-family features.
+                assert cfg.family not in ("ssm", "hybrid"), (
+                    "prefix cache / chunked prefill need stateless "
+                    f"attention KV, not family={cfg.family!r}"
+                )
+            if prefix_cache:
+                self.prefix_cache = RadixPrefixCache(self.pool)
             self.sched = ContinuousBatchingScheduler(
                 self.pool, max_slots, lookahead=steps_per_sync,
                 max_seq=max_seq, watermark_blocks=watermark_blocks,
-                token_budget=token_budget,
+                token_budget=token_budget, prefill_chunk=prefill_chunk,
+                cache=self.prefix_cache,
             )
             self.cache = make_paged_cache(
                 cfg, self.num_blocks, bs, max_slots, dtype=jnp.float32
@@ -242,7 +290,13 @@ class Engine:
             self._prefill_paged, self._copy_block = _make_paged_fns(
                 cfg, max_seq, bs, temperature
             )
+            self._prefill_chunk_fn = (
+                _make_chunk_fn(cfg, temperature)
+                if self.sched.chunked_mode else None
+            )
         else:
+            assert not prefix_cache and prefill_chunk is None, \
+                "prefix cache / chunked prefill require paged=True"
             self.cache = make_cache(cfg, max_slots, max_seq,
                                     dtype=jnp.float32)
             self._prefill, self._decode_1 = _make_fns(cfg, temperature)
@@ -252,6 +306,11 @@ class Engine:
         )
 
     def submit(self, req: Request):
+        # An empty prompt has no position to sample a first token from:
+        # the legacy prefill would crash and a chunked admission would
+        # wedge its slot in a zero-token prefill — reject it loudly.
+        if not req.prompt:
+            raise ValueError(f"request {req.rid} has an empty prompt")
         self.queue.append(req)
 
     @property
@@ -309,6 +368,15 @@ class Engine:
                 or self.lens[i] >= self.max_seq - 1
                 or self.budget[i] <= 0):
             req.done = True
+            if self.paged and self.prefix_cache is not None:
+                # Thread the written prefix into the radix cache BEFORE
+                # freeing: the tree takes refs, free drops the seq's, and
+                # the cached blocks survive at refcount 1 (reclaimable).
+                toks = (list(req.prompt[: self.pad_len])
+                        + list(req.out[:-1]))[: int(self.lens[i])]
+                self.prefix_cache.insert(
+                    toks, self.pool.block_table(req.rid), int(self.lens[i])
+                )
             self.slots[i] = None
             self.lens[i] = -1
             self.budget[i] = 0
@@ -318,9 +386,13 @@ class Engine:
 
     def _drain(self, buf: np.ndarray):
         """Extend per-request outputs from the (N, slots) token buffer and
-        mirror the device lens/budget recurrence on the host."""
+        mirror the device lens/budget recurrence on the host. Mid-prefill
+        slots emitted nothing and still owe chunks — their finish checks
+        (budget == 0 would misread as done) are skipped."""
         for i, req in enumerate(self.slots):
             if req is None:
+                continue
+            if self.paged and self.sched.mid_prefill(i):
                 continue
             toks = buf[:, i]
             toks = toks[toks >= 0]
@@ -336,11 +408,30 @@ class Engine:
             self._finish_check(i, req)
 
     # ------------------------------------------------------------ paged path
-    def _prefix_len(self, req: Request) -> int:
-        """Cache rows an admission must prefill: the (bucketed) prompt,
-        plus all-but-the-last generated token when resuming a preempted
-        request (the last one is the next feed token)."""
-        return min(len(req.prompt), self.pad_len) + max(len(req.out) - 1, 0)
+    def _prefix_tokens(self, req: Request) -> List[int]:
+        """Tokens an admission must have in cache before decoding: the
+        (bucket-truncated) prompt, plus all-but-the-last generated token
+        when resuming a preempted request (the last one is the next feed
+        token). This is also the prefix-cache lookup key."""
+        return list(req.prompt[: self.pad_len]) + list(req.out[:-1])
+
+    def _arm_decode(self, slot: int, req: Request, first):
+        """Make a slot decodable once its prefill has landed: a resumed
+        request re-feeds its last generated token (its first ``first``
+        was sampled before preemption); a fresh one syncs the prefill's
+        sampled first token. The ONLY place the resume-budget and
+        first-token bookkeeping live — the single-shot and chunked
+        admission paths both call it, so they cannot drift."""
+        if req.out:                     # resume after preemption
+            self.tokens[slot, 0] = req.out[-1]
+            self.budget[slot] = req.max_new - (len(req.out) - 1)
+        else:
+            first = int(first)          # one sync per fresh admission
+            self.host_syncs += 1
+            req.out.append(first)
+            self.tokens[slot, 0] = first
+            self.budget[slot] = req.max_new
+            self.tokens_out += 1
 
     def _admit_paged(self, slot: int, req: Request):
         """Prefill a scheduler-admitted request into ``slot``. Fresh
@@ -348,8 +439,7 @@ class Engine:
         preempted request resumes by recomputing its cache from
         prompt + generated-so-far (greedy-token-identical to never having
         been preempted) and re-feeds its last generated token."""
-        resume = len(req.out) > 0
-        prefix = list(req.prompt[: self.pad_len]) + list(req.out[:-1])
+        prefix = self._prefix_tokens(req)
         true_len = len(prefix)
         bucket = min(-(-true_len // self.pad_len) * self.pad_len,
                      self.max_seq)
@@ -366,17 +456,33 @@ class Engine:
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(bt_scatter), slot, self._row, true_len, sub,
         )
-        if resume:
-            self.tokens[slot, 0] = req.out[-1]
-            self.budget[slot] = req.max_new - (len(req.out) - 1)
-        else:
-            first = int(first)          # one sync per fresh admission
-            self.host_syncs += 1
-            req.out.append(first)
-            self.tokens[slot, 0] = first
-            self.budget[slot] = req.max_new
-            self.tokens_out += 1
+        self._arm_decode(slot, req, first)
         self.lens[slot] = true_len
+
+    def _run_prefill_chunk(self, slot: int, req: Request, start: int,
+                           end: int, last: bool):
+        """Prefill tokens [start, end) of the slot's prefix straight into
+        the pool blocks (exact shapes, no bucket padding — one retrace
+        per distinct chunk length). On the final chunk the sequence
+        becomes decodable: a fresh request samples its first token from
+        the chunk's last logits; a resumed one re-feeds its last
+        generated token."""
+        prefix = self._prefix_tokens(req)
+        toks = np.asarray([prefix[start:end]], np.int32)
+        table = self.pool.block_table(req.rid)
+        bt = np.full(self.max_blocks, self.num_blocks, np.int32)
+        bt[: len(table)] = table
+        self._key, sub = jax.random.split(self._key)
+        first, self.cache = self._prefill_chunk_fn(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(bt),
+            jnp.int32(start), sub,
+        )
+        self.pool.advance(req.rid, end)
+        self.lens[slot] = end
+        if not last:
+            self.budget[slot] = 0           # not decodable yet
+            return
+        self._arm_decode(slot, req, first)
 
     def _device_tables(self) -> jax.Array:
         bt = np.zeros((self.max_slots, self.max_blocks), np.int32)
@@ -389,7 +495,7 @@ class Engine:
 
     def _step_paged(self):
         plan = self.sched.plan_step(self.queue, self.slots, self.lens,
-                                    self._prefix_len)
+                                    self._prefix_tokens)
         for slot, _req in plan.preempted:
             self.lens[slot] = -1
             self.budget[slot] = 0
@@ -400,6 +506,8 @@ class Engine:
             )
         for slot, req in plan.admit:
             self._admit_paged(slot, req)
+        for slot, req, start, end, last in plan.prefill:
+            self._run_prefill_chunk(slot, req, start, end, last)
         running = sum(s is not None for s in self.slots)
         self.peak_running = max(self.peak_running, running)
         s = self.pool.stats()
@@ -408,22 +516,28 @@ class Engine:
                                       s.fragmentation)
         if running == 0:
             return
-        step_lens = np.where(plan.active, self.lens, -1).astype(np.int32)
-        # A partial reservation (watermark-starved pool) caps this step's
-        # writes at the granted capacity; the real budget is decremented
-        # by the drain, so the remainder carries to the next step.
-        cap_left = np.maximum(plan.granted - self.lens, 0)
-        step_budget = np.where(
-            plan.active, np.minimum(self.budget, cap_left), self.budget
-        ).astype(np.int32)
-        buf, self.cache, self._key = self._decode_n(
-            self.params, jnp.asarray(self.tokens), self.cache,
-            self._device_tables(), jnp.asarray(step_lens),
-            jnp.asarray(step_budget), self._key,
-        )
-        buf = np.asarray(buf)               # the single drain
-        self.host_syncs += 1
-        self._drain(buf)
+        if plan.active.any():
+            step_lens = np.where(plan.active, self.lens,
+                                 -1).astype(np.int32)
+            # A partial reservation (watermark-starved pool) caps this
+            # step's writes at the granted capacity, and plan.quota at
+            # the slot's slice of the shared token budget; the real
+            # budget is decremented by the drain, so the remainder
+            # carries to the next step.
+            cap_left = np.maximum(plan.granted - self.lens, 0)
+            step_budget = np.where(
+                plan.active,
+                np.minimum(np.minimum(self.budget, cap_left), plan.quota),
+                self.budget,
+            ).astype(np.int32)
+            buf, self.cache, self._key = self._decode_n(
+                self.params, jnp.asarray(self.tokens), self.cache,
+                self._device_tables(), jnp.asarray(step_lens),
+                jnp.asarray(step_budget), self._key,
+            )
+            buf = np.asarray(buf)           # the single drain
+            self.host_syncs += 1
+            self._drain(buf)
         self.steps += 1
 
     # ------------------------------------------------------------------ step
@@ -495,10 +609,20 @@ class GLBReplicaBalancer:
         self._buddies = jnp.asarray(lifeline_buddies(P, z))
         self._pending = jnp.zeros((P, P), bool)
         self._step = 0
+        self._rr = 0                   # submission counter: placement must
+                                       # not depend on rid density
         self.moves = 0
 
     def submit(self, req: Request, rr: Optional[int] = None):
-        i = (req.rid if rr is None else rr) % len(self.engines)
+        """Round-robin placement by an internal submission counter —
+        ``rid % P`` skews badly when rids are strided or clustered (e.g.
+        all-even rids land every request on replica 0 of 2). ``rr``
+        overrides the counter for adversarial test placement."""
+        if rr is None:
+            i = self._rr % len(self.engines)
+            self._rr += 1
+        else:
+            i = rr % len(self.engines)
         self.engines[i].submit(req)
 
     def balance(self):

@@ -21,6 +21,14 @@ properties:
   scheduler's decode lookahead), ``advance`` records tokens actually
   written, ``extend`` does both; stats separate the two so
   fragmentation reports real waste, not lookahead;
+* **reclaimable blocks** — the radix prefix cache (``serve.radix``)
+  holds references on blocks whose only owner is the cache itself;
+  those blocks are *reclaimable*: they count toward
+  ``available_blocks`` (so a warm cache never blocks admission) and
+  ``ensure_free`` evicts them on demand before an alloc/reserve gives
+  up. Eviction and preemption therefore share one accounting — the
+  scheduler's watermark math sees free + cached, and only when both
+  run out does PoolExhausted trigger a preemption;
 * **stats** — occupancy (live blocks / pool size) and internal
   fragmentation (allocated-but-unused token slots) feed the serving
   scheduler's admission watermark and the GLB replica balancer's
@@ -34,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class PoolExhausted(RuntimeError):
@@ -49,6 +57,8 @@ class PoolStats:
     free_blocks: int
     num_seqs: int
     used_tokens: int          # sum of per-seq WRITTEN lengths
+    cached_blocks: int        # reclaimable: referenced ONLY by the
+                              # prefix cache (free-on-demand)
     occupancy: float          # live_blocks / num_blocks
     fragmentation: float      # 1 - used / sum(per-seq allocated capacity):
                               # reserved-but-unwritten token slots (partial
@@ -75,6 +85,15 @@ class KVPool:
         self._ref = [0] * num_blocks
         self._tables: Dict[int, List[int]] = {}
         self._lens: Dict[int, int] = {}
+        # Prefix-cache accounting: blocks the radix tree owns, and an
+        # INCREMENTAL count of how many are reclaimable (refcount == 1,
+        # i.e. only the tree references them). available_blocks sits on
+        # the scheduler hot path, so this must never walk the tree.
+        self._cache_owned: set = set()
+        self._reclaimable = 0
+        # Eviction hook, wired up by the radix prefix cache: reclaim(n)
+        # evicts cache entries until ~n blocks return to the free heap.
+        self._reclaim_fn: Optional[Callable[[int], int]] = None
 
     # ------------------------------------------------------------ internals
     def _take_block(self) -> int:
@@ -82,13 +101,17 @@ class KVPool:
             raise PoolExhausted("KV pool out of blocks")
         b = heapq.heappop(self._free)
         assert self._ref[b] == 0
+        assert b not in self._cache_owned
         self._ref[b] = 1
         return b
 
     def _drop_block(self, b: int) -> None:
         assert self._ref[b] > 0, f"double free of block {b}"
         self._ref[b] -= 1
+        if self._ref[b] == 1 and b in self._cache_owned:
+            self._reclaimable += 1      # last non-tree reference gone
         if self._ref[b] == 0:
+            assert b not in self._cache_owned
             heapq.heappush(self._free, b)
 
     def _nblocks(self, tokens: int) -> int:
@@ -99,12 +122,67 @@ class KVPool:
     def free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def cached_blocks(self) -> int:
+        """Blocks referenced only by the prefix cache (reclaimable).
+        Maintained incrementally — O(1), safe on the scheduler hot path."""
+        return self._reclaimable
+
+    @property
+    def available_blocks(self) -> int:
+        """Free blocks plus cache-only blocks that eviction can return.
+        All admission/watermark arithmetic uses this, so a warm prefix
+        cache never costs capacity — eviction and preemption share one
+        accounting."""
+        return len(self._free) + self._reclaimable
+
+    def attach_reclaimer(self, reclaim_fn: Callable[[int], int]) -> None:
+        """Register the prefix cache's evict hook."""
+        self._reclaim_fn = reclaim_fn
+
+    def ensure_free(self, need: int) -> None:
+        """Evict cached-but-unreferenced blocks until ``need`` are free (or
+        the cache runs dry — the caller's exhaustion check then fires)."""
+        if need > len(self._free) and self._reclaim_fn is not None:
+            self._reclaim_fn(need - len(self._free))
+
+    def refcount(self, b: int) -> int:
+        return self._ref[b]
+
+    def add_ref(self, b: int) -> None:
+        """Take an extra sequence reference on a live block (fork/adopt).
+        A cache-owned block gaining a sequence reference stops being
+        reclaimable — eviction could no longer free it."""
+        assert self._ref[b] > 0, f"add_ref on dead block {b}"
+        if self._ref[b] == 1 and b in self._cache_owned:
+            self._reclaimable -= 1
+        self._ref[b] += 1
+
+    def cache_ref(self, b: int) -> None:
+        """The radix tree takes ownership of a live block (insert path).
+        The inserting sequence still holds its reference, so the block
+        becomes reclaimable only when that sequence frees."""
+        assert self._ref[b] > 0, f"cache_ref on dead block {b}"
+        assert b not in self._cache_owned, f"block {b} cached twice"
+        self._cache_owned.add(b)
+        self._ref[b] += 1
+
+    def cache_unref(self, b: int) -> bool:
+        """The radix tree drops ownership (eviction). Returns True when
+        the block actually returned to the free heap."""
+        assert b in self._cache_owned, f"evicting uncached block {b}"
+        self._cache_owned.discard(b)
+        if self._ref[b] == 1:
+            self._reclaimable -= 1      # was counted as reclaimable
+        self._drop_block(b)
+        return self._ref[b] == 0
+
     def blocks_for(self, tokens: int) -> int:
         """Physical blocks a ``tokens``-long sequence needs."""
         return self._nblocks(tokens)
 
     def can_alloc(self, tokens: int) -> bool:
-        return self._nblocks(tokens) <= self.free_blocks
+        return self._nblocks(tokens) <= self.available_blocks
 
     def has_seq(self, sid: int) -> bool:
         return sid in self._tables
@@ -126,11 +204,30 @@ class KVPool:
         if sid in self._tables:
             raise ValueError(f"seq {sid} already allocated")
         need = self._nblocks(tokens)
-        if need > self.free_blocks:
+        if need > self.available_blocks:
             raise PoolExhausted(
-                f"need {need} blocks, {self.free_blocks} free"
+                f"need {need} blocks, {self.available_blocks} available"
+            )
+        self.ensure_free(need)
+        if need > self.free_blocks:    # cache eviction under-delivered
+            raise PoolExhausted(
+                f"need {need} blocks, {self.free_blocks} free after evict"
             )
         self._tables[sid] = [self._take_block() for _ in range(need)]
+        self._lens[sid] = tokens
+        return self.block_table(sid)
+
+    def adopt(self, sid: int, blocks: List[int], tokens: int) -> List[int]:
+        """Register a new sequence over already-live shared blocks (a
+        prefix-cache hit): refcounts bump, nothing is allocated, and the
+        first write into the shared partial tail COWs via reserve() like
+        any forked sequence. ``blocks`` must cover exactly ``tokens``."""
+        if sid in self._tables:
+            raise ValueError(f"seq {sid} already allocated")
+        assert self._nblocks(tokens) == len(blocks), (tokens, blocks)
+        for b in blocks:
+            self.add_ref(b)
+        self._tables[sid] = list(blocks)
         self._lens[sid] = tokens
         return self.block_table(sid)
 
@@ -175,10 +272,17 @@ class KVPool:
                                  min(end_blk, len(table)))
             if self._ref[table[idx]] > 1
         ]
-        if need_new + len(cow_idxs) > self.free_blocks:
+        need = need_new + len(cow_idxs)
+        if need > self.available_blocks:
             raise PoolExhausted(
-                f"reserve needs {need_new + len(cow_idxs)} blocks, "
-                f"{self.free_blocks} free"
+                f"reserve needs {need} blocks, "
+                f"{self.available_blocks} available"
+            )
+        self.ensure_free(need)
+        if need > self.free_blocks:    # cache eviction under-delivered
+            raise PoolExhausted(
+                f"reserve needs {need} blocks, "
+                f"{self.free_blocks} free after evict"
             )
         copies: List[Tuple[int, int]] = []
         for idx in cow_idxs:
@@ -217,7 +321,7 @@ class KVPool:
             raise ValueError(f"seq {child} already allocated")
         table = self._tables[parent]
         for b in table:
-            self._ref[b] += 1
+            self.add_ref(b)
         self._tables[child] = list(table)
         self._lens[child] = self._lens[parent]
         return self.block_table(child)
@@ -246,6 +350,7 @@ class KVPool:
             free_blocks=self.free_blocks,
             num_seqs=len(self._tables),
             used_tokens=used,
+            cached_blocks=self.cached_blocks,
             occupancy=live / self.num_blocks,
             fragmentation=max(0.0, 1.0 - used / cap) if cap else 0.0,
         )

@@ -1,0 +1,246 @@
+"""Property-based hardening of the KV pool + radix prefix cache: random
+op sequences (alloc / reserve / advance / extend / fork / free /
+insert-on-release / evict) driven through one interpreter that checks,
+after EVERY op:
+
+* refcount conservation — each block's refcount equals the number of
+  sequence tables plus radix-tree nodes that reference it, and the free
+  heap holds exactly the refcount-0 blocks;
+* free + seq-referenced + cached == capacity — cached being the blocks
+  only the tree references (the pool's reclaimable accounting);
+* COW isolation — a shadow memory records every token written through a
+  block table; after any op, every sequence reads back exactly its own
+  tokens, so no write can ever leak through a block shared with an
+  unrelated sequence (and prefix-cache hits hand back blocks whose
+  content IS the matched tokens);
+* deterministic replay — the same op sequence on a fresh pool reproduces
+  identical tables, free-heap order, and stats.
+
+Runs in tier-1 twice: hypothesis-driven when the package is present
+(CI), and over fixed-seed numpy op streams through the same interpreter
+so the logic is exercised even under the optional-hypothesis shim.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.kvpool import KVPool, PoolExhausted
+from repro.serve.radix import RadixPrefixCache
+
+from _optional_hypothesis import HAVE_HYPOTHESIS, given, settings, st
+
+NUM_BLOCKS = 12
+BS = 4
+MAX_SEQ = NUM_BLOCKS * BS
+
+# A few shared prompt stems so random sequences actually collide in the
+# radix tree (pure-random tokens would never produce a prefix hit).
+_STEMS = [
+    [7, 3, 9, 2, 5, 8, 6, 4, 1, 2, 3, 4, 9, 9, 8, 7],
+    [7, 3, 9, 2, 1, 1, 2, 2, 3, 3, 4, 4],
+    [5, 5, 5, 5, 6, 6, 6, 6],
+]
+
+
+def _tokens_for(sid: int, a: int, n: int):
+    """Deterministic token stream for sequence ``sid``: a shared stem
+    followed by a sid-unique tail (positions are content, so shadow-memory
+    readback detects any cross-sequence block aliasing)."""
+    stem = _STEMS[a % len(_STEMS)]
+    out = list(stem) + [100 + sid * 7 + k % 5 for k in range(n)]
+    return out[:n] if n <= len(out) else out + [
+        200 + sid + k for k in range(n - len(out))
+    ]
+
+
+class _Harness:
+    """Interprets (op, a, b) triples against a pool (+ optional radix
+    cache) while mirroring every write in a shadow block memory."""
+
+    def __init__(self, with_cache: bool):
+        self.pool = KVPool(NUM_BLOCKS, BS)
+        self.cache = RadixPrefixCache(self.pool) if with_cache else None
+        self.mem = {}                  # (block, off) -> token
+        self.toks = {}                 # sid -> full planned token stream
+        self.next_sid = 0
+        self.trace = []                # replay-determinism fingerprint
+
+    # ----------------------------------------------------------- shadow ops
+    def _write(self, sid: int, lo: int, hi: int):
+        table = self.pool.block_table(sid)
+        for p in range(lo, hi):
+            self.mem[(table[p // BS], p % BS)] = self.toks[sid][p]
+
+    def _apply_copies(self, copies):
+        for src, dst in copies:
+            for off in range(BS):
+                if (src, off) in self.mem:
+                    self.mem[(dst, off)] = self.mem[(src, off)]
+
+    # ------------------------------------------------------------------ ops
+    def step(self, op: int, a: int, b: int):
+        live = sorted(self.pool._tables)
+        if op == 0:                                   # alloc + write prompt
+            n = 1 + a % 20
+            sid = self.next_sid
+            self.next_sid += 1
+            self.toks[sid] = _tokens_for(sid, b, MAX_SEQ)
+            if self.cache is not None:
+                m = self.cache.fork(sid, self.toks[sid][:n])
+                if m == 0:
+                    self.pool.alloc(sid, 0)
+                try:
+                    copies = self.pool.reserve(sid, n)[1]
+                except PoolExhausted:
+                    self.pool.free(sid)
+                    del self.toks[sid]
+                    return
+                self._apply_copies(copies)
+                self.pool.advance(sid, n)
+                self._write(sid, m, n)
+            else:
+                try:
+                    self.pool.alloc(sid, n)
+                except PoolExhausted:
+                    del self.toks[sid]
+                    return
+                self._write(sid, 0, n)
+        elif op == 1 and live:                        # extend (reserve+write)
+            sid = live[a % len(live)]
+            w = self.pool.seq_len(sid)
+            n = min(w + 1 + b % 9, MAX_SEQ)
+            try:
+                _, copies = self.pool.extend(sid, n)
+            except PoolExhausted:
+                return
+            self._apply_copies(copies)
+            self._write(sid, w, n)
+        elif op == 2 and live:                        # fork (pool-level COW)
+            parent = live[a % len(live)]
+            sid = self.next_sid
+            self.next_sid += 1
+            self.pool.fork(parent, sid)
+            self.toks[sid] = list(
+                self.toks[parent][: self.pool.seq_len(parent)]
+            ) + _tokens_for(sid, b, MAX_SEQ)
+            self.toks[sid] = self.toks[sid][:MAX_SEQ]
+        elif op == 3 and live:                        # free (maybe via cache)
+            sid = live[a % len(live)]
+            if self.cache is not None and b % 2 == 0:
+                w = self.pool.seq_len(sid)
+                self.cache.insert(self.toks[sid][:w],
+                                  self.pool.block_table(sid), w)
+            self.pool.free(sid)
+        elif op == 4 and live:                        # reserve lookahead
+            sid = live[a % len(live)]
+            n = min(self.pool.seq_len(sid) + 1 + b % 8, MAX_SEQ)
+            try:
+                _, copies = self.pool.reserve(sid, n)
+            except PoolExhausted:
+                return
+            self._apply_copies(copies)
+        elif op == 5 and self.cache is not None:      # explicit eviction
+            self.cache.evict(1 + a % 4)
+        self.trace.append(
+            (op, sorted((s, tuple(t)) for s, t in self.pool._tables.items()),
+             sorted(self.pool._free))
+        )
+
+    # ----------------------------------------------------------- invariants
+    def check(self):
+        pool, cache = self.pool, self.cache
+        refs = [0] * NUM_BLOCKS
+        for table in pool._tables.values():
+            for blk in table:
+                refs[blk] += 1
+        tree_blocks = set()
+        if cache is not None:
+            stack = [cache.root]
+            while stack:
+                nd = stack.pop()
+                for blk in nd.blocks:
+                    refs[blk] += 1
+                    assert blk not in tree_blocks, \
+                        f"block {blk} owned by two tree nodes"
+                    tree_blocks.add(blk)
+                stack.extend(nd.children.values())
+        # refcount conservation + free heap == the refcount-0 blocks
+        assert refs == pool._ref, (refs, pool._ref)
+        assert sorted(pool._free) == [
+            blk for blk in range(NUM_BLOCKS) if refs[blk] == 0
+        ]
+        # free + seq-referenced + cached == capacity
+        cached = pool.cached_blocks
+        seq_ref = (NUM_BLOCKS - pool.free_blocks) - cached
+        assert pool.free_blocks + seq_ref + cached == NUM_BLOCKS
+        assert cached == sum(
+            1 for blk in tree_blocks if pool.refcount(blk) == 1
+        )
+        # COW isolation: every sequence reads back exactly its own tokens
+        for sid, table in pool._tables.items():
+            for p in range(pool.seq_len(sid)):
+                got = self.mem.get((table[p // BS], p % BS))
+                assert got == self.toks[sid][p], (
+                    f"seq {sid} pos {p}: read {got}, "
+                    f"expected {self.toks[sid][p]} — block aliasing"
+                )
+
+
+def _run_ops(ops, with_cache: bool):
+    h = _Harness(with_cache)
+    for op, a, b in ops:
+        h.step(int(op) % 6, int(a), int(b))
+        h.check()
+    return h
+
+
+def _op_stream(seed: int, n: int = 90):
+    rng = np.random.RandomState(seed)
+    return list(zip(rng.randint(0, 6, n), rng.randint(0, 64, n),
+                    rng.randint(0, 64, n)))
+
+
+@pytest.mark.parametrize("with_cache", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_op_streams_hold_invariants(seed, with_cache):
+    """Fixed-seed streams through the interpreter — tier-1 coverage even
+    when hypothesis is absent (the shim skips only the @given tests)."""
+    _run_ops(_op_stream(seed), with_cache)
+
+
+@pytest.mark.parametrize("with_cache", [False, True])
+def test_deterministic_replay(with_cache):
+    """Same ops on a fresh pool => identical tables, free-heap order, and
+    stats at every step (the allocator is fully deterministic)."""
+    ops = _op_stream(7)
+    h1 = _run_ops(ops, with_cache)
+    h2 = _run_ops(ops, with_cache)
+    assert h1.trace == h2.trace
+    assert h1.pool.stats() == h2.pool.stats()
+
+
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 5), st.integers(0, 63), st.integers(0, 63)),
+    max_size=60,
+))
+@settings(max_examples=40, deadline=None)
+def test_pool_props_hypothesis(ops):
+    _run_ops(ops, with_cache=False)
+
+
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 5), st.integers(0, 63), st.integers(0, 63)),
+    max_size=60,
+))
+@settings(max_examples=40, deadline=None)
+def test_pool_cache_props_hypothesis(ops):
+    _run_ops(ops, with_cache=True)
+
+
+def test_shim_exercises_interpreter_when_hypothesis_missing():
+    """Guard: if hypothesis is missing the @given suites skip, but the
+    fixed-seed streams above must still have run the same interpreter —
+    this asserts the interpreter itself is importable and total."""
+    h = _run_ops([(0, 0, 0), (1, 0, 3), (2, 0, 1), (3, 0, 1), (5, 2, 0)],
+                 with_cache=True)
+    assert h.pool.num_blocks == NUM_BLOCKS
+    assert HAVE_HYPOTHESIS in (True, False)

@@ -131,6 +131,116 @@ def test_ops_attention_routes_paged_impls():
         ops.attention(q, kp, vp, block_tables=bt)  # tables need lengths
 
 
+# ----------------------------------------------------- chunked prefill
+def _prefill_case(B, Sq, Hq, Hkv, D, offs, true_lens, salt):
+    ks = jax.random.split(jax.random.fold_in(KEY, salt), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (NUM_BLOCKS, BS, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (NUM_BLOCKS, BS, Hkv, D), jnp.float32)
+    lens = [o + t for o, t in zip(offs, true_lens)]
+    bt = _tables(lens, salt=salt)
+    return q, kp, vp, bt, np.asarray(lens, np.int32), np.asarray(
+        offs, np.int32)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2)])  # MHA, GQA
+@pytest.mark.parametrize("Sq,offs", [
+    (5, [0, 8]),      # chunk from scratch / block-aligned offset
+    (8, [3, 16]),     # mid-block offset / chunk == block size
+    (1, [7, 0]),      # 1-token chunk (budget smaller than one block)
+    (16, [16, 40]),   # chunk spanning multiple blocks
+])
+def test_paged_prefill_matches_ref(Hq, Hkv, Sq, offs):
+    """paged_prefill kernel == gather oracle == attention_ref composed on
+    each sequence's gathered visible window (queries [s, e) vs keys
+    [0, e), causal by absolute position)."""
+    B, D = 2, 32
+    true_lens = [Sq, Sq]
+    q, kp, vp, bt, lens, qoff = _prefill_case(
+        B, Sq, Hq, Hkv, D, offs, true_lens, salt=Sq * 31 + offs[0]
+    )
+    from repro.kernels.paged_decode import paged_prefill
+
+    o_k = paged_prefill(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens),
+                        jnp.asarray(qoff), interpret=True)
+    o_r = ref.paged_prefill_ref(q, kp, vp, jnp.asarray(bt),
+                                jnp.asarray(lens), jnp.asarray(qoff))
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+    for b in range(B):
+        e = int(lens[b])
+        kc = jnp.asarray(_gathered(kp, bt, b, e))[None]
+        vc = jnp.asarray(_gathered(vp, bt, b, e))[None]
+        want = ref.attention_ref(q[b:b + 1], kc, vc, causal=True)
+        np.testing.assert_allclose(np.asarray(o_k[b:b + 1]),
+                                   np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_paged_prefill_padded_tail_is_harmless():
+    """Bucket-padded tail queries (true chunk shorter than Sq) produce
+    garbage the caller discards — but the REAL rows must be exact and
+    finite everywhere (no NaN from fully-masked rows)."""
+    B, Sq, Hq, Hkv, D = 2, 8, 4, 2, 32
+    true_lens = [5, 3]
+    offs = [8, 0]
+    q, kp, vp, bt, lens, qoff = _prefill_case(
+        B, Sq, Hq, Hkv, D, offs, true_lens, salt=77
+    )
+    from repro.kernels.paged_decode import paged_prefill
+
+    o_k = paged_prefill(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens),
+                        jnp.asarray(qoff), interpret=True)
+    o_r = ref.paged_prefill_ref(q, kp, vp, jnp.asarray(bt),
+                                jnp.asarray(lens), jnp.asarray(qoff))
+    assert np.isfinite(np.asarray(o_k)).all()
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(o_k[b, : true_lens[b]]),
+            np.asarray(o_r[b, : true_lens[b]]), atol=2e-5, rtol=2e-5,
+        )
+
+
+def test_ops_attention_routes_paged_prefill():
+    """q_offset (or Sq > 1 with tables) routes every impl spelling to a
+    chunked-prefill path; Sq > 1 without q_offset is an error, as is
+    lengths with Sq > 1 and no tables."""
+    B, Sq, Hq, Hkv, D = 2, 4, 4, 2, 32
+    q, kp, vp, bt, lens, qoff = _prefill_case(
+        B, Sq, Hq, Hkv, D, [8, 3], [Sq, Sq], salt=13
+    )
+    kw = dict(lengths=jnp.asarray(lens), block_tables=jnp.asarray(bt),
+              q_offset=jnp.asarray(qoff))
+    o_ref = ops.attention(q, kp, vp, impl="ref", **kw)
+    o_kernel = ops.attention(q, kp, vp, impl="pallas_interpret", **kw)
+    o_auto = ops.attention(q, kp, vp, impl="auto", **kw)
+    o_dec = ops.attention(q, kp, vp, impl="decode_ref", **kw)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_array_equal(np.asarray(o_auto), np.asarray(o_ref))
+    np.testing.assert_array_equal(np.asarray(o_dec), np.asarray(o_ref))
+    with pytest.raises(ValueError):
+        ops.attention(q, kp, vp, lengths=jnp.asarray(lens),
+                      block_tables=jnp.asarray(bt))   # Sq>1 needs q_offset
+    with pytest.raises(ValueError):
+        ops.attention(q, kp, vp, lengths=jnp.asarray(lens))  # no tables
+
+
+def test_paged_prefill_q_offset_one_token_equals_decode():
+    """A 1-token chunk at offset L-1 computes the same attention as a
+    decode step at cache length L-1 (window L): the two kernels must
+    agree on their shared boundary case."""
+    B, Hq, Hkv, D = 2, 4, 2, 32
+    L = [21, 64]
+    q, kp, vp = _pool(B, Hq, Hkv, D, salt=5)
+    bt = _tables(L, salt=5)
+    lens = jnp.asarray(L, jnp.int32)
+    o_dec = ref.paged_decode_ref(q, kp, vp, jnp.asarray(bt), lens)
+    o_pre = ref.paged_prefill_ref(q, kp, vp, jnp.asarray(bt), lens,
+                                  lens - 1)
+    np.testing.assert_allclose(np.asarray(o_dec), np.asarray(o_pre),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_paged_block_kv_table():
     from repro.core.autotune import paged_block_kv
 

@@ -1,0 +1,157 @@
+"""Cross-implementation identity matrix: under greedy sampling every
+serving engine — legacy per-token loop, contiguous fori_loop fast path,
+paged, paged + prefix cache (with and without chunked prefill) — must
+emit exactly the same tokens, across several registry architectures
+(dense, dense+qkv-bias, MoE — not just the one cfg earlier PRs pinned),
+including a forced-eviction run where a cached prefix is reclaimed under
+pool pressure and transparently recomputed.
+
+The MoE arch runs with a raised capacity_factor (dropless): with
+capacity-bounded dispatch a token's output depends on which OTHER slots
+share its decode step (drops are batch-global), so exact cross-engine
+identity is only well-defined when nothing is dropped — the router,
+sort-dispatch, and paged-attention stack are still fully exercised."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import init_lm
+from repro.serve.engine import Engine, Request
+
+# dense / dense+qkv_bias / MoE — three distinct attention+ffn stacks
+MATRIX_ARCHS = ["tinyllama-1.1b", "qwen2-1.5b", "moonshot-v1-16b-a3b"]
+
+_PARAMS = {}
+
+
+def _setup(arch):
+    if arch not in _PARAMS:
+        cfg = ARCHS[arch].smoke()
+        if cfg.family == "moe":
+            cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        _PARAMS[arch] = (cfg, init_lm(jax.random.key(0), cfg))
+    return _PARAMS[arch]
+
+
+SHARED = [7, 3, 9, 2, 5, 8, 6, 4, 1, 2, 3, 4]   # 12-token system prompt
+
+
+def _reqs(n=4, max_new=8):
+    return [
+        Request(rid=i, prompt=SHARED + [10 + i, 11, 12 + i % 3],
+                max_new=max_new + i % 3)
+        for i in range(n)
+    ]
+
+
+def _run(engine, reqs, step=None):
+    step = step or engine.step
+    for r in reqs:
+        engine.submit(r)
+    guard = 0
+    while engine.load > 0 and guard < 600:
+        step()
+        guard += 1
+    assert all(r.done for r in reqs)
+    return [list(r.out) for r in reqs]
+
+
+KW = dict(max_slots=2, max_seq=64, pad_len=16, steps_per_sync=4)
+
+
+@pytest.fixture(scope="module", params=MATRIX_ARCHS)
+def baseline(request):
+    cfg, params = _setup(request.param)
+    e = Engine(cfg, params, **KW)
+    return request.param, _run(e, _reqs(), e.step_legacy)
+
+
+def test_contiguous_fast_matches_legacy(baseline):
+    arch, base = baseline
+    cfg, params = _setup(arch)
+    assert _run(Engine(cfg, params, **KW), _reqs()) == base
+
+
+def test_paged_matches_legacy(baseline):
+    arch, base = baseline
+    cfg, params = _setup(arch)
+    e = Engine(cfg, params, paged=True, block_size=8, **KW)
+    assert _run(e, _reqs()) == base
+    assert e.pool.free_blocks == e.pool.num_blocks
+
+
+def test_paged_prefix_cache_matches_legacy(baseline):
+    """Hit + miss paths: the first wave misses and seeds the radix tree,
+    the second wave hits the shared prompt's cached blocks — and both
+    waves' outputs are token-identical to the legacy engine."""
+    arch, base = baseline
+    cfg, params = _setup(arch)
+    e = Engine(cfg, params, paged=True, block_size=8, prefix_cache=True,
+               **KW)
+    assert _run(e, _reqs()) == base
+    assert e.prefix_cache.misses > 0
+    hits0 = e.prefix_cache.hits
+    second = _reqs()
+    for r in second:
+        r.rid += 100
+    assert _run(e, second) == base
+    assert e.prefix_cache.hits > hits0, "second wave must hit the cache"
+    assert e.prefix_cache.tokens_reused >= 8
+    # all seq refs dropped: everything left is reclaimable cache
+    assert (e.pool.free_blocks + e.pool.cached_blocks
+            == e.pool.num_blocks)
+
+
+def test_paged_prefix_cache_chunked_matches_legacy(baseline):
+    arch, base = baseline
+    cfg, params = _setup(arch)
+    e = Engine(cfg, params, paged=True, block_size=8, prefix_cache=True,
+               prefill_chunk=4, token_budget=8, **KW)
+    assert _run(e, _reqs()) == base
+    assert e.sched.chunks_scheduled >= len(_reqs())
+
+
+def test_partial_hit_that_cannot_fit_falls_back_to_miss():
+    """Regression: a mid-block cache hit whose fork would pin the very
+    blocks the availability check counted as reclaimable used to pass
+    admission, fail in reserve, and retry the queue head forever (and
+    inflate hit stats every retry). The scheduler must instead admit the
+    request as a plain miss — evicting the cached prefix — and finish."""
+    cfg, params = _setup("tinyllama-1.1b")
+    kw = dict(max_slots=1, max_seq=32, pad_len=16, steps_per_sync=16)
+    pa = SHARED                                  # 12 tokens
+    pb = SHARED[:10] + [90, 91]                  # mid-block divergence
+    mk = lambda: [Request(rid=0, prompt=list(pa), max_new=5),
+                  Request(rid=1, prompt=list(pb), max_new=5)]
+    base = _run(Engine(cfg, params, **kw), mk())
+    # 4 blocks total: A's release caches 2 blocks; B's hit-credited
+    # admission needs 3 fresh blocks but pinning the 2 matched blocks
+    # leaves only 2 available — the credited path cannot fit.
+    e = Engine(cfg, params, paged=True, block_size=8, num_blocks=4,
+               prefix_cache=True, **kw)
+    reqs = mk()
+    out = _run(e, reqs)                          # must not livelock
+    assert out == base
+    assert e.prefix_cache.evictions > 0          # miss path evicted A
+    assert e.prefix_cache.hits == 0
+    assert e.prefix_cache.tokens_reused == 0     # stats stay honest
+    assert e.pool.free_blocks + e.pool.cached_blocks == e.pool.num_blocks
+
+
+def test_forced_eviction_recomputes_transparently(baseline):
+    """A pool sized so that caching request A's blocks leaves too little
+    for B's growth: B's admission/reservation must evict A's cached
+    prefix (reclaimable accounting), and a later request with A's prompt
+    misses and recomputes — token-identical throughout."""
+    arch, base = baseline
+    cfg, params = _setup(arch)
+    kw = dict(KW, max_slots=1, max_seq=32)
+    eb = Engine(cfg, params, **kw)
+    base3 = _run(eb, _reqs(3), eb.step_legacy)
+    e = Engine(cfg, params, paged=True, block_size=8, num_blocks=4,
+               prefix_cache=True, **kw)
+    assert _run(e, _reqs(3)) == base3
+    assert e.prefix_cache.evictions > 0, \
+        "pool sizing must force cache eviction"

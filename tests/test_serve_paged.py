@@ -161,6 +161,28 @@ def test_balancer_hungry_on_free_capacity_not_total_idleness():
     assert bal.moves > 0, "partially-busy replica with capacity must steal"
 
 
+def test_balancer_round_robin_ignores_rid_density():
+    """Regression: placement used rid % P, so strided rids (all even, or
+    clustered ids from an upstream sharder) piled every request onto one
+    replica. The internal submission counter must spread them evenly
+    regardless of rid values; the rr override still pins placement."""
+    engines = [Engine(CFG, PARAMS, max_slots=1, max_seq=32, pad_len=8,
+                      steps_per_sync=4) for _ in range(2)]
+    bal = GLBReplicaBalancer(engines)
+    for i in range(8):
+        # adversarial rids: all even => rid % 2 == 0 for every request
+        bal.submit(Request(rid=2 * i, prompt=[3, i + 1, 4], max_new=4))
+    qs = [len(e.queue) for e in engines]
+    assert qs == [4, 4], f"strided rids skewed placement: {qs}"
+    bal2 = GLBReplicaBalancer(
+        [Engine(CFG, PARAMS, max_slots=1, max_seq=32, pad_len=8,
+                steps_per_sync=4) for _ in range(2)]
+    )
+    for i in range(4):
+        bal2.submit(Request(rid=2 * i, prompt=[3, 1, 4], max_new=4), rr=0)
+    assert [len(e.queue) for e in bal2.engines] == [4, 0]
+
+
 def test_balancer_completes_all_requests_paged():
     """End-to-end: paged replicas + balancer drain an adversarial queue;
     pool pressure feeds hunger via can_accept."""
