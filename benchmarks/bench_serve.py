@@ -6,7 +6,13 @@ concurrent sequences at fixed cache memory (the paged packing win) —
 plus the PR 4 policy layer: the shared-system-prompt workload (radix
 prefix cache: hit rate and prefill tokens saved) and TTFT p50/p99 for
 short requests arriving behind long-prompt admissions, with and without
-chunked prefill.
+chunked prefill — plus the PR 5 replica fabric: a skewed workload (one
+hot replica wedged on long RUNNING sequences, one cold) comparing
+queue-only stealing (the cold replica can only pick up sequences the hot
+one preempt-thrashes back to its queue, paying a chunked recompute
+prefill per move) against live KV migration (running sequences ship
+their written blocks at the first balance pass). Makespan in supersteps
+is the deterministic headline metric for that pair.
 
 Steady-state measurement: all slots admitted and kernels compiled before
 the timer starts, so the numbers isolate the engine decode loop itself.
@@ -23,7 +29,7 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import init_lm
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, GLBReplicaBalancer, Request
 
 STEPS_PER_SYNC = 16
 MAX_NEW = 96
@@ -39,6 +45,16 @@ N_PREFIX_REQS = 16
 # TTFT workload: short requests arriving behind long-prompt admissions
 TTFT_LONG_PROMPT = [(5 * k + 2) % 250 + 1 for k in range(120)]
 TTFT_CHUNK = 16
+# skewed-workload fabric: one hot replica wedged on long RUNNING
+# sequences (queue empty, slots saturated), one cold — the scenario
+# queue-only stealing cannot fix and live KV migration can
+SKEW_REPLICAS = 2
+SKEW_SLOTS = 4
+SKEW_MAX_NEW = 110
+SKEW_BLOCKS = 36        # fits 2 full seqs + lookahead comfortably, NOT 4:
+                        # the queue-only arm must preempt-thrash instead
+SKEW_CHUNK = 16         # chunked prefill makes a recompute resume COST
+                        # supersteps — the work live migration avoids
 
 
 def _bench_cfg():
@@ -185,6 +201,54 @@ def _drive_ttft(engine):
             max(per_step_prefill.values(), default=0))
 
 
+def _mk_skew_engines(cfg, params):
+    """One fabric: identical paged replicas whose pool fits ~2 full-length
+    sequences with lookahead, not 4. pad_len == max_seq keeps every
+    recompute prefill on ONE trace so wall-clock compares engines, not
+    retraces."""
+    return [
+        Engine(cfg, params, max_slots=SKEW_SLOTS, max_seq=MAX_SEQ,
+               pad_len=MAX_SEQ, steps_per_sync=STEPS_PER_SYNC, paged=True,
+               block_size=PAGED_BS, num_blocks=SKEW_BLOCKS,
+               prefill_chunk=SKEW_CHUNK,
+               token_budget=SKEW_SLOTS * STEPS_PER_SYNC)
+        for _ in range(SKEW_REPLICAS)
+    ]
+
+
+def _drive_skew(engines, migrate, rid0=0):
+    """All requests land on replica 0 and are admitted there BEFORE the
+    balancer runs — the wedged state: queue empty, every slot busy on a
+    long sequence, N-1 cold replicas idle. Queue-only stealing can only
+    move work after watermark preemption kicks a sequence back to the
+    queue (losing its written KV to a recompute on the thief); live
+    migration sheds running sequences with their KV intact at the first
+    balance pass. Returns (makespan_s, supersteps, preemptions,
+    migrations)."""
+    bal = GLBReplicaBalancer(engines, migrate=migrate)
+    reqs = [Request(rid=rid0 + r, prompt=[3, r + 1, 4],
+                    max_new=SKEW_MAX_NEW) for r in range(SKEW_SLOTS)]
+    for r in reqs:
+        bal.submit(r, rr=0)
+    engines[0].step()           # wedge: hot replica admits every slot
+    p0 = sum(e.sched.preemptions for e in engines)
+    t0 = time.time()
+    bal.run(max_steps=2000)
+    dt = time.time() - t0
+    assert all(r.done for r in reqs)
+    preempts = sum(e.sched.preemptions for e in engines) - p0
+    return dt, bal.supersteps, preempts, bal.migrations
+
+
+def _skew_arm(cfg, params, migrate):
+    """Warm run on fresh engines (compiles every trace the arm hits),
+    then the timed run REUSES the drained engines so both arms measure
+    steady-state scheduling, not per-engine jit closures compiling."""
+    engines = _mk_skew_engines(cfg, params)
+    _drive_skew(engines, migrate, rid0=10_000)
+    return _drive_skew(engines, migrate, rid0=0)
+
+
 def run():
     cfg = _bench_cfg()
     params = init_lm(jax.random.key(0), cfg)
@@ -258,6 +322,12 @@ def run():
                token_budget=SLOTS * STEPS_PER_SYNC, **ttft_kw)
     )
 
+    # Skewed fabric: queue-only stealing vs live KV migration. Makespan
+    # in SUPERSTEPS is the deterministic acceptance metric (greedy
+    # decode + deterministic matching); wall-clock rides along.
+    dt_q, steps_q, pre_q, _ = _skew_arm(cfg, params, migrate=False)
+    dt_m, steps_m, pre_m, migs = _skew_arm(cfg, params, migrate=True)
+
     # syncs per decoded *position* is the architectural constant: the
     # legacy loop drains every position (1.0), the fori_loop engine drains
     # once per steps_per_sync positions.
@@ -297,6 +367,15 @@ def run():
          f"max_prefill_tokens_per_step={pf_ck};chunk={TTFT_CHUNK};"
          f"p99_vs_nochunk={p99_ck / max(p99_nc_t, 1e-9):.2f}x;"
          f"max_step_vs_nochunk={step_ck / max(step_nc, 1e-9):.2f}x"),
+        ("serve_skew_queue_steal", 1e6 * dt_q,
+         f"makespan_s={dt_q:.2f};makespan_steps={steps_q};"
+         f"preemptions={pre_q};replicas={SKEW_REPLICAS};"
+         f"slots={SKEW_SLOTS};pool_blocks={SKEW_BLOCKS}"),
+        ("serve_skew_live_migration", 1e6 * dt_m,
+         f"makespan_s={dt_m:.2f};makespan_steps={steps_m};"
+         f"preemptions={pre_m};migrations={migs};"
+         f"steps_vs_queue_steal={steps_m / max(steps_q, 1):.2f}x;"
+         f"wall_vs_queue_steal={dt_m / max(dt_q, 1e-9):.2f}x"),
     ]
 
 

@@ -1,4 +1,4 @@
-"""Serving example: continuous batching across 2 replicas with the GLB
+"""Serving example: continuous batching across N replicas with the GLB
 request balancer (paper's library applied to serving). All requests land on
 replica 0; the balancer's lifeline matching redistributes them.
 
@@ -7,6 +7,8 @@ replica 0; the balancer's lifeline matching redistributes them.
     PYTHONPATH=src python examples/serve_lm.py --paged --prefix-cache \
         --prefill-chunk 8                                 # radix cache +
                                                           # chunked prefill
+    PYTHONPATH=src python examples/serve_lm.py --paged --replicas 3 \
+        --migrate                                         # live KV migration
 
 With ``--paged`` each replica runs the block-granular KV pool + the
 continuous-batching scheduler (admission, watermark preemption) and the
@@ -15,7 +17,12 @@ adds the radix prefix cache — requests here share a system prompt, so
 later admissions fork the cached blocks instead of re-prefilling them —
 and the report gains hit-rate / prefill-tokens-saved lines.
 ``--prefill-chunk N`` splits long prompt prefills into N-token chunks
-interleaved with decode.
+interleaved with decode. ``--migrate`` arms the balancer's second steal
+tier: a replica whose queue is empty but whose slots are all busy sheds
+*running* sequences — their written KV blocks travel to the thief and
+decoding resumes there greedy-token-identically (DESIGN.md §9). The
+run ends via GLB termination detection (the balance pass's load vector)
+and prints the fabric-level merged stats report.
 """
 import argparse
 import time
@@ -37,40 +44,57 @@ def main():
                     help="radix prefix cache (requires --paged)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill budget (requires --paged)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="number of engine replicas in the fabric")
+    ap.add_argument("--migrate", action="store_true",
+                    help="steal LIVE sequences (KV migration) when a "
+                         "victim's queue is empty but its slots are "
+                         "saturated (requires --paged)")
     args = ap.parse_args()
 
     cfg = ARCHS["tinyllama-1.1b"].smoke()
     params = init_lm(jax.random.key(0), cfg)
-    kw = dict(max_slots=2, max_seq=64, pad_len=32)
+    kw = dict(max_slots=2, max_seq=64, pad_len=32, steps_per_sync=4)
     if args.paged:
         kw.update(paged=True, block_size=8,
                   prefix_cache=args.prefix_cache,
                   prefill_chunk=args.prefill_chunk)
-    elif args.prefix_cache or args.prefill_chunk:
-        ap.error("--prefix-cache / --prefill-chunk require --paged")
-    engines = [Engine(cfg, params, **kw) for _ in range(2)]
-    bal = GLBReplicaBalancer(engines)
+    elif args.prefix_cache or args.prefill_chunk or args.migrate:
+        ap.error("--prefix-cache / --prefill-chunk / --migrate "
+                 "require --paged")
+    engines = [Engine(cfg, params, **kw) for _ in range(args.replicas)]
+    bal = GLBReplicaBalancer(engines, migrate=args.migrate)
 
+    # Heterogeneous lengths: the first few requests run long, so replicas
+    # that drew short ones go hungry while a peer is still wedged on
+    # running sequences — the state only the --migrate tier can fix.
     reqs = [
         Request(rid=i, prompt=SYSTEM_PROMPT + [2 + i, 7, (3 * i) % cfg.vocab],
-                max_new=6 + (i % 5))
+                max_new=(36 if i < 4 else 4) + (i % 3))
         for i in range(10)
     ]
     for r in reqs:
         bal.submit(r, rr=0)  # adversarial: everything on replica 0
+    if args.migrate:
+        # Wedge replica 0 first: drain its queue into running slots so
+        # the balancer's LIVE tier (not just queue steals) is exercised.
+        engines[0].step()
 
     t0 = time.time()
     bal.run(max_steps=500)
     dt = time.time() - t0
     assert all(r.done for r in reqs)
+    assert bal.terminated, "GLB termination must fire, not max_steps"
     total = sum(e.tokens_out for e in engines)
     mode = "paged" if args.paged else "contiguous"
     if args.prefix_cache:
         mode += "+prefix-cache"
     if args.prefill_chunk:
         mode += f"+chunk{args.prefill_chunk}"
+    if args.migrate:
+        mode += "+migrate"
     print(f"[{mode}] completed {len(reqs)} requests, {total} tokens "
-          f"in {dt:.1f}s")
+          f"in {dt:.1f}s over {args.replicas} replicas")
     for i, e in enumerate(engines):
         line = (f"  replica {i}: {e.tokens_out} tokens, {e.steps} steps, "
                 f"peak {e.peak_running} concurrent")
@@ -79,6 +103,9 @@ def main():
                      f"peak fragmentation {e.peak_fragmentation:.2f}, "
                      f"{e.sched.admissions} admissions, "
                      f"{e.sched.preemptions} preemptions")
+        if e.migrations_out or e.migrations_in:
+            line += (f", {e.migrations_out} migrated out / "
+                     f"{e.migrations_in} in")
         print(line)
         if args.paged and e.prefix_cache is not None:
             c = e.prefix_cache
@@ -89,8 +116,8 @@ def main():
                   f"{e.pool.cached_blocks} blocks cached now")
         if args.paged and e.sched.chunks_scheduled:
             print(f"    chunked prefill: {e.sched.chunks_scheduled} chunks")
-    print(f"GLB moves: {bal.moves} (queued requests stolen by hungry "
-          f"replica)")
+    print()
+    print(bal.report())
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.prompt} -> {r.out}")
 

@@ -15,7 +15,9 @@ from .params import GLBParams
 from .problem import GLBProblem
 from .scheduler import run_sim, GLBRun
 from .executor import run_shardmap, lower_shardmap, GLBDistRun
-from .lifeline import lifeline_buddies, lifeline_mask, match_steals
+from .lifeline import (lifeline_buddies, lifeline_mask, match_steals,
+                       terminated)
+from .stats import fabric_summary, merge_place_stats
 
 __all__ = [
     "GLB",
@@ -29,4 +31,7 @@ __all__ = [
     "lifeline_buddies",
     "lifeline_mask",
     "match_steals",
+    "terminated",
+    "merge_place_stats",
+    "fabric_summary",
 ]

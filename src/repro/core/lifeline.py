@@ -40,6 +40,16 @@ import jax.numpy as jnp
 from .params import GLBParams
 
 
+def terminated(loads) -> bool:
+    """GLB termination detection (paper §2.4: termination is *hidden*
+    inside the protocol, not a separate barrier): the replicated load
+    vector every place already gathers for the steal matching doubles as
+    the termination detector — the computation is over exactly when
+    ``all(load == 0)``. Callers fold this into their balance pass instead
+    of running a second polling loop over the places."""
+    return not bool(np.any(np.asarray(loads)))
+
+
 def lifeline_buddies(P: int, z: int) -> np.ndarray:
     """Static (P, z) buddy table: buddy_i(p) = (p + 2^i) mod P."""
     p = np.arange(P)[:, None]

@@ -38,12 +38,20 @@ interleaved with decode (the ``paged_prefill`` kernel attends chunk
 co-scheduled decodes for one giant forward. Both features are
 attention-family only (recurrent conv/ssm state cannot be forked).
 
-The multi-replica balancer treats per-replica queue depth as the GLB size
-vector and moves queued requests from overloaded to hungry replicas with
-the same deterministic matching the task scheduler uses — the paper's
-library applied to serving (DESIGN.md §4/§6). Hungry means "has a free
-slot and free KV blocks", so replicas steal on memory headroom, not only
-when fully idle.
+The multi-replica balancer treats per-replica load as the GLB size
+vector and steals work from overloaded to hungry replicas with the same
+deterministic matching the task scheduler uses — the paper's library
+applied to serving (DESIGN.md §4/§6/§9). Stealing is two-tier: queued
+(unstarted) requests move first; with ``migrate=True`` a victim whose
+queue is empty but whose slots are saturated sheds *live* sequences —
+their written KV blocks travel as a dense buffer (``KVPool.extract`` /
+``inject``) and decoding resumes on the thief greedy-token-identically
+(falling back to radix-seeded or plain resume-by-recompute when the
+thief's pool is tight). Hungry means "has a free slot and free KV
+blocks", so replicas steal on memory headroom, not only when fully idle.
+Termination and result collection are GLB-style: the load vector the
+matching already gathers detects completion, and per-replica stats merge
+into one fabric report.
 """
 from __future__ import annotations
 
@@ -55,13 +63,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import GLBParams, lifeline_buddies, match_steals
+from repro.core import (GLBParams, fabric_summary, lifeline_buddies,
+                        match_steals, merge_place_stats, terminated)
 from repro.core.autotune import paged_block_kv
 from repro.models import (decode_step, forward, make_cache,
                           make_paged_cache, sample_tokens)
 from repro.models.config import ModelConfig
 
-from .kvpool import KVPool
+from .kvpool import KVPool, PoolExhausted
 from .radix import RadixPrefixCache
 from .scheduler import ContinuousBatchingScheduler
 
@@ -73,6 +82,36 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+@dataclasses.dataclass
+class Migration:
+    """A live sequence in flight between replicas (DESIGN.md §9). The
+    victim's ``migrate_out`` owns the only copy of the request and its
+    packed KV until the thief's ``migrate_in`` lands it — the victim has
+    already freed its blocks and slot, so dropping a Migration loses the
+    request. ``kv`` is the dense transfer buffer: k/v pool blocks
+    covering exactly the WRITTEN tokens, in logical order (None for
+    recurrent families, which resume by recompute)."""
+    req: Request
+    tokens: List[int]          # cache contents = prompt bucket + out[:-1]
+    written: int               # == len(tokens), the cache fill level
+    block_size: int
+    kv: Optional[dict]         # {"k","v"}: np (layers, n, bs, heads, hd)
+
+
+# Module-level jits (NOT per-engine closures): every engine with the same
+# cache/buffer shapes shares one compiled gather/scatter, so a fabric of N
+# replicas compiles the migration path once, not N times.
+@jax.jit
+def _gather_kv(cache_k, cache_v, ids):
+    return cache_k[:, ids], cache_v[:, ids]
+
+
+@jax.jit
+def _scatter_kv(cache_k, cache_v, ids, bk, bv):
+    return (cache_k.at[:, ids].set(bk.astype(cache_k.dtype)),
+            cache_v.at[:, ids].set(bv.astype(cache_v.dtype)))
 
 
 def _scrub_row(row):
@@ -236,7 +275,8 @@ class Engine:
                  watermark_blocks: int = 0,
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 shed_policy: str = "youngest"):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -258,6 +298,11 @@ class Engine:
         self.peak_running = 0  # max concurrent sequences observed
         self.peak_occupancy = 0.0   # paged: max pool occupancy observed
         self.peak_fragmentation = 0.0
+        self.migrations_out = 0     # live sequences shipped to a peer
+        self.migrations_in = 0      # live sequences landed with their KV
+        self.migrations_seeded = 0  # landed via a planted radix prefix
+        self.migrations_recompute = 0   # landed WITHOUT KV (recompute)
+        self._seed_sid = -1         # temp seq ids for radix seeding
         if paged:
             bs = block_size or paged_block_kv(max_seq, cfg.hd)
             assert max_seq % bs == 0, (max_seq, bs)
@@ -282,7 +327,7 @@ class Engine:
                 self.pool, max_slots, lookahead=steps_per_sync,
                 max_seq=max_seq, watermark_blocks=watermark_blocks,
                 token_budget=token_budget, prefill_chunk=prefill_chunk,
-                cache=self.prefix_cache,
+                cache=self.prefix_cache, shed_policy=shed_policy,
             )
             self.cache = make_paged_cache(
                 cfg, self.num_blocks, bs, max_slots, dtype=jnp.float32
@@ -484,6 +529,154 @@ class Engine:
             return
         self._arm_decode(slot, req, first)
 
+    # ------------------------------------------------------- live migration
+    def can_host(self, written: int) -> bool:
+        """Whether a migrated sequence with ``written`` cache tokens can
+        run here at all: it needs at least one free position below
+        ``max_seq`` to decode into (regardless of landing mode — even
+        the recompute resume prefills the full prefix). The balancer
+        checks this before shedding so an incompatible thief is never
+        handed a Migration it cannot land."""
+        return self.paged and written < self.max_seq
+
+    def migratable_slots(self) -> List[int]:
+        """Slots the balancer may shed, best victim first (the
+        scheduler's shed policy). Empty for contiguous engines — they
+        have no block-granular extract — and excludes mid-prefill slots."""
+        if not self.paged:
+            return []
+        return self.sched.shed_candidates(self.slots, self.budget)
+
+    def migrate_out(self, slot: int) -> Migration:
+        """Ship the live sequence in ``slot`` to a peer replica: pack its
+        written KV blocks into a dense transfer buffer (one gather, one
+        host sync), free its blocks and slot here, and hand ownership of
+        the request to the returned Migration. Greedy token identity is
+        preserved because the buffer holds exactly the cache prefix
+        positions [0, written) — the thief re-feeds the last generated
+        token at position ``written``, just like a preemption resume.
+        Mid-prefill slots are rejected: their KV is half-written and
+        their chunk plan cannot move."""
+        assert self.paged, "live migration needs the paged KV pool"
+        req = self.slots[slot]
+        assert req is not None, f"slot {slot} is idle"
+        if self.sched.mid_prefill(slot):
+            raise ValueError(
+                f"slot {slot} is mid-prefill and cannot migrate"
+            )
+        tokens = self._prefix_tokens(req)
+        written = int(self.lens[slot])
+        assert len(tokens) == written, (len(tokens), written)
+        kv = None
+        if self.cfg.family not in ("ssm", "hybrid"):
+            blocks, _ = self.pool.extract(req.rid)
+            ids = jnp.asarray(np.asarray(blocks, np.int32))
+            bk, bv = _gather_kv(self.cache["k"], self.cache["v"], ids)
+            kv = {"k": np.asarray(bk), "v": np.asarray(bv)}
+            self.host_syncs += 1
+        mig = Migration(req=req, tokens=tokens, written=written,
+                        block_size=self.block_size, kv=kv)
+        self.slots[slot] = None
+        self.lens[slot] = -1
+        self.budget[slot] = 0
+        self.tokens[slot, 0] = 0
+        self.sched.release(req.rid)
+        self.sched.slot_released(slot)
+        self.migrations_out += 1
+        return mig
+
+    def _requeue_migrated(self, req: Request) -> None:
+        # Front of the queue: the sequence was already running and must
+        # not wait behind fresh arrivals (same rule as preemption).
+        self.queue.appendleft(req)
+
+    def migrate_in(self, mig: Migration) -> str:
+        """Land a migrated sequence. Three outcomes, best first:
+
+        * ``"live"`` — a free slot and enough pool blocks: inject fresh
+          blocks, scatter the transfer buffer into them, and adopt the
+          sequence as a running slot (zero recompute);
+        * ``"seeded"`` — the pool cannot fit the whole sequence, but a
+          prefix cache exists: inject however many full blocks DO fit
+          under a temporary seq id, seed them into the radix tree, and
+          requeue — the resume-by-recompute admission then *hits* the
+          planted prefix and recomputes only the suffix;
+        * ``"recompute"`` — no KV came along (recurrent family), block
+          sizes differ, or nothing fits: plain resume-by-recompute.
+
+        Every path preserves greedy token identity — they differ only in
+        how much prefill work the move costs."""
+        assert self.paged, "live migration needs the paged KV pool"
+        req = mig.req
+        if not self.can_host(mig.written):
+            # Requeueing here would wedge/crash a later admission (the
+            # prefix cannot fit this engine's max_seq); the caller still
+            # owns the Migration and must pick a compatible host.
+            raise ValueError(
+                f"sequence with {mig.written} cache tokens cannot run "
+                f"under max_seq={self.max_seq}; check can_host() first"
+            )
+        # A block-size mismatch (or no KV: recurrent family) makes the
+        # raw buffer unusable; degrade to resume-by-recompute.
+        if mig.kv is None or mig.block_size != self.block_size:
+            self._requeue_migrated(req)
+            self.migrations_recompute += 1
+            return "recompute"
+        slot = next((i for i in range(self.max_slots)
+                     if self.slots[i] is None), None)
+        if slot is not None and self.pool.can_alloc(mig.written):
+            try:
+                table = self.pool.inject(req.rid, mig.written)
+            except PoolExhausted:   # eviction under-delivered (pinned)
+                table = None
+            if table is not None:
+                self._scatter_migrated(table, mig.kv)
+                self.sched.adopt(slot)
+                self.slots[slot] = req
+                self.lens[slot] = mig.written
+                # req.out is non-empty (mid-decode), so this takes the
+                # resume branch — one bookkeeping path with preemption.
+                self._arm_decode(slot, req, None)
+                self.peak_running = max(
+                    self.peak_running,
+                    sum(s is not None for s in self.slots),
+                )
+                self.migrations_in += 1
+                return "live"
+        if self.prefix_cache is not None:
+            full = mig.written // self.block_size
+            fit = min(full, self.pool.available_blocks)
+            if fit > 0:
+                sid = self._seed_sid
+                self._seed_sid -= 1
+                seeded = fit * self.block_size
+                try:
+                    table = self.pool.inject(sid, seeded)
+                except PoolExhausted:   # reclaimables pinned mid-evict
+                    table = None
+                if table is not None:
+                    self._scatter_migrated(
+                        table,
+                        {n: b[:, :fit] for n, b in mig.kv.items()},
+                    )
+                    self.prefix_cache.seed(mig.tokens[:seeded], table,
+                                           seeded)
+                    self.pool.free(sid)  # tree refs keep blocks cached
+                    self._requeue_migrated(req)
+                    self.migrations_seeded += 1
+                    return "seeded"
+        self._requeue_migrated(req)
+        self.migrations_recompute += 1
+        return "recompute"
+
+    def _scatter_migrated(self, table: List[int], kv: dict) -> None:
+        ids = jnp.asarray(np.asarray(table, np.int32))
+        self.cache = dict(self.cache)
+        self.cache["k"], self.cache["v"] = _scatter_kv(
+            self.cache["k"], self.cache["v"], ids,
+            jnp.asarray(kv["k"]), jnp.asarray(kv["v"]),
+        )
+
     def _device_tables(self) -> jax.Array:
         bt = np.zeros((self.max_slots, self.max_blocks), np.int32)
         for i, req in enumerate(self.slots):
@@ -588,22 +781,77 @@ class Engine:
             self._finish_check(i, req)
         self.steps += 1
 
+    def stats(self) -> dict:
+        """Per-replica counters for fabric-level result collection
+        (``core.stats.merge_place_stats``). Numeric-only, flat — the
+        union across heterogeneous replicas merges field-wise."""
+        st = dict(
+            tokens_out=self.tokens_out,
+            steps=self.steps,
+            host_syncs=self.host_syncs,
+            peak_running=self.peak_running,
+            migrations_out=self.migrations_out,
+            migrations_in=self.migrations_in,
+            migrations_seeded=self.migrations_seeded,
+            migrations_recompute=self.migrations_recompute,
+        )
+        if self.paged:
+            st.update(
+                admissions=self.sched.admissions,
+                preemptions=self.sched.preemptions,
+                adoptions=self.sched.adoptions,
+                chunks_scheduled=self.sched.chunks_scheduled,
+                peak_occupancy_pct=round(100 * self.peak_occupancy, 1),
+            )
+        if self.prefix_cache is not None:
+            st.update(
+                cache_hits=self.prefix_cache.hits,
+                cache_misses=self.prefix_cache.misses,
+                tokens_reused=self.prefix_cache.tokens_reused,
+                cache_evictions=self.prefix_cache.evictions,
+                seeded_tokens=self.prefix_cache.seeded_tokens,
+            )
+        return st
+
 
 class GLBReplicaBalancer:
-    """GLB over replicas: queue depths are the size vector; hungry replicas
-    steal queued requests via the deterministic matching.
+    """GLB over replicas — the paper's two-tier lifeline protocol applied
+    to serving (DESIGN.md §9): steal *unstarted* work first, then *work
+    in progress*.
+
+    Per balance pass the per-replica loads are the GLB size vector and
+    hungry replicas are matched to victims by the same deterministic
+    lifeline matching the task scheduler uses (``core.lifeline``). A
+    matched thief steals in two tiers:
+
+    * **tier 1 — queued requests**: drained from the victim's queue
+      oldest-first (FIFO), preserving arrival order;
+    * **tier 2 — live sequences** (``migrate=True``, paged engines): when
+      the victim's queue is empty but its slots are saturated, the
+      victim's shed policy picks running sequences and their KV state
+      migrates block-for-block (``Engine.migrate_out`` →
+      ``Engine.migrate_in``) — the paper's "steal work in progress", so a
+      replica wedged on long-running sequences can still shed load. The
+      victim always keeps at least one running sequence (a bare handoff
+      helps nobody).
 
     Hungry = "can admit more work right now": a free decode slot AND (for
     paged engines) free KV blocks above the watermark, with an empty local
     queue — so a replica under memory pressure never steals, and a busy
-    replica with spare capacity does (it used to require total idleness).
-    Steals drain the victim's queue oldest-first (FIFO), preserving
-    arrival order for the stolen requests."""
+    replica with spare capacity does.
+
+    Termination is GLB-style: the load vector gathered for the matching
+    doubles as the termination detector (``core.lifeline.terminated`` —
+    all loads zero), so ``run`` has no second polling loop over the
+    engines; ``collect`` merges per-replica stats into the fabric-level
+    result (the paper's hidden termination + result collection, §2.4)."""
 
     def __init__(self, engines: List[Engine],
-                 params: GLBParams = GLBParams()):
+                 params: GLBParams = GLBParams(),
+                 migrate: bool = False):
         self.engines = engines
         self.params = params
+        self.migrate = migrate
         P = len(engines)
         z = params.resolve_z(P)
         self._buddies = jnp.asarray(lifeline_buddies(P, z))
@@ -611,7 +859,11 @@ class GLBReplicaBalancer:
         self._step = 0
         self._rr = 0                   # submission counter: placement must
                                        # not depend on rid density
-        self.moves = 0
+        self.moves = 0                 # tier-1: queued requests stolen
+        self.migrations = 0            # tier-2: live sequences migrated
+        self.migration_modes = {"live": 0, "seeded": 0, "recompute": 0}
+        self.supersteps = 0
+        self.terminated = False
 
     def submit(self, req: Request, rr: Optional[int] = None):
         """Round-robin placement by an internal submission counter —
@@ -625,8 +877,46 @@ class GLBReplicaBalancer:
             i = rr % len(self.engines)
         self.engines[i].submit(req)
 
-    def balance(self):
-        sizes = np.asarray([len(e.queue) for e in self.engines], np.int32)
+    def _stealable(self, e: Engine) -> int:
+        """One replica's entry in the GLB size vector: its queue depth,
+        or — migration tier — its shed-candidate count when the queue is
+        empty but every slot is busy (minus the one sequence a victim
+        always keeps)."""
+        q = len(e.queue)
+        if q:
+            return q
+        if self.migrate and e.paged and e.free_slots == 0:
+            return max(len(e.migratable_slots()) - 1, 0)
+        return 0
+
+    def _steal_live(self, thief: Engine, victim: Engine) -> None:
+        """Tier 2: migrate running sequences victim -> thief. Takes up to
+        half of what the victim can shed (the GLB steal-half rule), one
+        per free thief slot; ``migrate_in`` decides per sequence whether
+        it lands live, radix-seeded, or as a recompute resume."""
+        cands = [s for s in victim.migratable_slots()
+                 if thief.can_host(int(victim.lens[s]))]
+        running = sum(s is not None for s in victim.slots)
+        sheddable = max(len(cands) - 1, 0)      # victim keeps one running
+        # GLB steal-half: ship half the victim's running set, bounded by
+        # what it may shed and the slots the thief can absorb into.
+        take = min(running // 2, sheddable, thief.free_slots)
+        for slot in cands[:take]:
+            mode = thief.migrate_in(victim.migrate_out(slot))
+            self.migrations += 1
+            self.migration_modes[mode] += 1
+            self.moves += 1
+
+    def balance(self) -> bool:
+        """One balancing pass. Returns True when the fabric is done —
+        the load vector gathered for the steal matching doubles as the
+        GLB termination detector, so callers need no separate poll."""
+        loads = np.asarray([e.load for e in self.engines], np.int32)
+        if terminated(loads):
+            self.terminated = True
+            return True
+        sizes = np.asarray([self._stealable(e) for e in self.engines],
+                           np.int32)
         hungry = np.asarray(
             [e.can_accept() and len(e.queue) == 0 for e in self.engines]
         )
@@ -641,17 +931,54 @@ class GLBReplicaBalancer:
             if victim < 0:
                 continue
             v = self.engines[int(victim)]
-            take = max(1, len(v.queue) // 2)
-            for _ in range(min(take, len(v.queue))):
-                # Oldest-first: stolen requests keep their arrival order
-                # on the thief instead of inverting the victim's tail.
-                self.engines[thief].submit(v.queue.popleft())
-                self.moves += 1
+            if v.queue:
+                # Tier 1: steal queued (unstarted) requests first.
+                take = max(1, len(v.queue) // 2)
+                for _ in range(min(take, len(v.queue))):
+                    # Oldest-first: stolen requests keep their arrival
+                    # order on the thief, not the victim's inverted tail.
+                    self.engines[thief].submit(v.queue.popleft())
+                    self.moves += 1
+            elif self.migrate and v.paged and self.engines[thief].paged:
+                self._steal_live(self.engines[thief], v)
         self._step += 1
+        return False
 
     def run(self, max_steps: int = 10_000):
-        while any(e.load > 0 for e in self.engines) and max_steps > 0:
-            self.balance()
+        """Drive the fabric to completion: balance, superstep every
+        engine, repeat until the balance pass reports termination."""
+        while max_steps > 0:
+            if self.balance():
+                break
             for e in self.engines:
                 e.step()
+            self.supersteps += 1
             max_steps -= 1
+
+    # ------------------------------------------------------ result collection
+    def collect(self) -> dict:
+        """Fabric-level result collection: merge per-replica stats into
+        one report (total/mean/max per field) plus the balancer's own
+        counters."""
+        merged = merge_place_stats([e.stats() for e in self.engines])
+        merged["_balancer"] = {
+            "moves": self.moves,
+            "migrations": self.migrations,
+            "supersteps": self.supersteps,
+            **{f"mig_{k}": v for k, v in self.migration_modes.items()},
+        }
+        return merged
+
+    def report(self) -> str:
+        """Human-readable fabric summary (``core.stats.fabric_summary``)
+        plus the balancer counters."""
+        lines = [fabric_summary([e.stats() for e in self.engines],
+                                title="replica fabric")]
+        lines.append(
+            f"  balancer: {self.moves} moves ({self.migrations} live "
+            f"migrations: {self.migration_modes['live']} live / "
+            f"{self.migration_modes['seeded']} seeded / "
+            f"{self.migration_modes['recompute']} recompute), "
+            f"{self.supersteps} supersteps, terminated={self.terminated}"
+        )
+        return "\n".join(lines)

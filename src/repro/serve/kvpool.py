@@ -21,6 +21,11 @@ properties:
   scheduler's decode lookahead), ``advance`` records tokens actually
   written, ``extend`` does both; stats separate the two so
   fragmentation reports real waste, not lookahead;
+* **live migration** — ``extract`` names the physical blocks holding a
+  sequence's written tokens (the dense transfer set for shipping a
+  *running* sequence to another replica) and ``inject`` re-materializes
+  a migrated sequence over fresh blocks on the receiving pool; both are
+  id-level only — ``serve.engine`` owns the device gather/scatter;
 * **reclaimable blocks** — the radix prefix cache (``serve.radix``)
   holds references on blocks whose only owner is the cache itself;
   those blocks are *reclaimable*: they count toward
@@ -312,6 +317,26 @@ class KVPool:
         if tokens > self._lens[sid]:
             self.advance(sid, tokens)
         return out
+
+    def extract(self, sid: int) -> Tuple[List[int], int]:
+        """Pack descriptor for live migration (DESIGN.md §9): the physical
+        blocks holding the sequence's WRITTEN tokens — full blocks plus
+        the partial tail — and the written length. Lookahead-only blocks
+        (reserved, never written) are excluded: the thief re-reserves its
+        own lookahead. The pool stays untouched; the engine gathers these
+        blocks into a dense device buffer and calls ``free`` once the
+        transfer is out the door."""
+        written = self._lens[sid]
+        return self._tables[sid][: self._nblocks(written)], written
+
+    def inject(self, sid: int, tokens: int) -> List[int]:
+        """Re-materialize a migrated-in sequence: allocate fresh blocks
+        covering ``tokens`` written tokens and register the sequence over
+        them (the ``extract`` counterpart on the thief). Atomic — raises
+        PoolExhausted (after cache eviction) without allocating anything
+        when the pool cannot fit the sequence; the caller then falls back
+        to resume-by-recompute."""
+        return self.alloc(sid, tokens)
 
     def fork(self, parent: int, child: int) -> List[int]:
         """Register ``child`` sharing every block of ``parent`` (prefix

@@ -81,6 +81,7 @@ class RadixPrefixCache:
         self.tokens_reused = 0         # prefill positions never recomputed
         self.evictions = 0             # leaf nodes dropped
         self.cached_tokens = 0         # tokens currently in the tree
+        self.seeded_tokens = 0         # tokens planted by live migration
         pool.attach_reclaimer(self.evict)
 
     def _tick(self) -> int:
@@ -209,6 +210,19 @@ class RadixPrefixCache:
             node = child
             d += m
         return new_blocks
+
+    def seed(self, tokens, table: List[int], written: int) -> int:
+        """Plant a migrated prefix (DESIGN.md §9): when a live migration
+        cannot re-materialize a full sequence on this pool, the engine
+        injects however many full blocks DO fit under a temporary seq id,
+        scatters their KV, and seeds them here — the subsequent
+        resume-by-recompute admission then *hits* the planted prefix and
+        recomputes only the suffix. Same contract as ``insert`` (call
+        before freeing the temporary seq); returns newly-cached blocks."""
+        new = self.insert(tokens, table, written)
+        self.seeded_tokens += new * self.bs   # only NEWLY-cached blocks:
+        return new                            # dedup against the tree
+                                              # must not inflate the stat
 
     # ----------------------------------------------------------- eviction
     def reclaimable_blocks(self) -> int:

@@ -99,7 +99,8 @@ class ContinuousBatchingScheduler:
                  max_seq: int, watermark_blocks: int = 0,
                  token_budget: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 cache=None):
+                 cache=None, shed_policy: str = "youngest"):
+        assert shed_policy in ("youngest", "budget"), shed_policy
         self.pool = pool
         self.max_slots = max_slots
         self.lookahead = lookahead
@@ -108,12 +109,14 @@ class ContinuousBatchingScheduler:
         self.token_budget = token_budget
         self.prefill_chunk = prefill_chunk
         self.cache = cache
+        self.shed_policy = shed_policy
         self._admit_seq = 0                    # monotonic admission clock
         self._order = [-1] * max_slots         # slot -> admission seqno
         self._prefill: Dict[int, List[int]] = {}   # slot -> [done, total]
         self.preemptions = 0
         self.admissions = 0
         self.chunks_scheduled = 0
+        self.adoptions = 0                     # migrated-in sequences
 
     # --------------------------------------------------------------- helpers
     @property
@@ -136,6 +139,31 @@ class ContinuousBatchingScheduler:
         if not occ:
             return None
         return max(occ, key=lambda i: self._order[i])
+
+    def shed_candidates(self, slots: List, budgets) -> List[int]:
+        """Live sequences the replica balancer may migrate out, best
+        victim first (DESIGN.md §9). Mid-prefill slots are excluded —
+        their KV is half-written and a migrated chunk plan would dangle.
+        Policies: ``youngest`` (least cache invested: the cheapest
+        transfer, and the mirror of preemption's victim order) or
+        ``budget`` (largest remaining token budget: the move that
+        offloads the most future work per transferred byte)."""
+        occ = [i for i in range(self.max_slots)
+               if slots[i] is not None and i not in self._prefill]
+        if self.shed_policy == "budget":
+            return sorted(occ, key=lambda i: (-int(budgets[i]),
+                                              -self._order[i]))
+        return sorted(occ, key=lambda i: -self._order[i])
+
+    def adopt(self, slot: int) -> None:
+        """Register a migrated-in sequence as a running slot WITHOUT
+        passing through admission: the engine has already injected its
+        blocks and host state. It takes the youngest admission seqno —
+        it is the newest arrival here, so watermark preemption and a
+        subsequent shed pass both see it as the natural first victim."""
+        self._order[slot] = self._admit_seq
+        self._admit_seq += 1
+        self.adoptions += 1
 
     def can_admit(self, prefix_len: int, engine_empty: bool) -> bool:
         """The balancer's hunger signal (``Engine.can_accept``): does a

@@ -1,12 +1,28 @@
 """Optional-hypothesis shim: the property-based tests use these stand-ins
 so that a missing `hypothesis` package skips just those tests instead of
-failing collection for the whole module."""
+failing collection for the whole module.
+
+``REPRO_HYPOTHESIS_SCALE=N`` multiplies every ``max_examples`` by N —
+tier-1 keeps the fast per-test budgets, and the nightly workflow reruns
+the same suites 10x deeper without touching the test code.
+"""
+import os
+
 import pytest
 
+_SCALE = max(1, int(os.environ.get("REPRO_HYPOTHESIS_SCALE", "1") or "1"))
+
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import given, strategies as st  # noqa: F401
+    from hypothesis import settings as _hyp_settings
 
     HAVE_HYPOTHESIS = True
+
+    def settings(*args, **kwargs):
+        if "max_examples" in kwargs:
+            kwargs["max_examples"] = kwargs["max_examples"] * _SCALE
+        return _hyp_settings(*args, **kwargs)
+
 except ImportError:
     HAVE_HYPOTHESIS = False
     _SKIP = pytest.mark.skip(reason="hypothesis not installed")

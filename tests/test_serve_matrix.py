@@ -113,6 +113,33 @@ def test_paged_prefix_cache_chunked_matches_legacy(baseline):
     assert e.sched.chunks_scheduled >= len(_reqs())
 
 
+def test_forced_live_migration_matches_legacy(baseline):
+    """A sequence yanked mid-decode from one replica and re-materialized
+    block-for-block on another (Engine.migrate_out -> migrate_in) must
+    emit exactly the tokens an uninterrupted single-engine run does —
+    across the same arch matrix as every other engine variant."""
+    arch, base = baseline
+    cfg, params = _setup(arch)
+    e0 = Engine(cfg, params, paged=True, block_size=8, **KW)
+    e1 = Engine(cfg, params, paged=True, block_size=8, **KW)
+    reqs = _reqs()
+    for r in reqs:
+        e0.submit(r)
+    e0.step()                          # admit 2, decode a burst: mid-decode
+    cands = e0.migratable_slots()
+    assert cands, "a running slot must be sheddable"
+    mode = e1.migrate_in(e0.migrate_out(cands[0]))
+    assert mode == "live", f"KV must move intact, got {mode!r}"
+    guard = 0
+    while (e0.load > 0 or e1.load > 0) and guard < 600:
+        e0.step()
+        e1.step()
+        guard += 1
+    assert all(r.done for r in reqs)
+    assert [list(r.out) for r in reqs] == base
+    assert e1.migrations_in == 1 and e0.migrations_out == 1
+
+
 def test_partial_hit_that_cannot_fit_falls_back_to_miss():
     """Regression: a mid-block cache hit whose fork would pin the very
     blocks the availability check counted as reclaimable used to pass
