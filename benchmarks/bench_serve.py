@@ -12,7 +12,14 @@ queue-only stealing (the cold replica can only pick up sequences the hot
 one preempt-thrashes back to its queue, paying a chunked recompute
 prefill per move) against live KV migration (running sequences ship
 their written blocks at the first balance pass). Makespan in supersteps
-is the deterministic headline metric for that pair.
+is the deterministic headline metric for that pair — plus the PR 6
+observability contract: the same fori_loop workload driven tracer-off
+vs tracer-on (``serve_obs_overhead``: the disabled path is one
+attribute check, the on-path must stay within a few percent and add
+ZERO host syncs), registry-derived TTFT quantiles printed beside the
+numpy ones on the TTFT rows, and the live-migration arm run under a
+real ``Tracer`` whose validated Chrome trace JSON is written to
+``BENCH_serve_trace.json`` (uploaded by CI next to the bench JSON).
 
 Steady-state measurement: all slots admitted and kernels compiled before
 the timer starts, so the numbers isolate the engine decode loop itself.
@@ -29,6 +36,7 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import init_lm
+from repro.obs import Tracer, quantiles_from_values, validate_chrome_trace
 from repro.serve.engine import Engine, GLBReplicaBalancer, Request
 
 STEPS_PER_SYNC = 16
@@ -55,6 +63,7 @@ SKEW_BLOCKS = 36        # fits 2 full seqs + lookahead comfortably, NOT 4:
                         # the queue-only arm must preempt-thrash instead
 SKEW_CHUNK = 16         # chunked prefill makes a recompute resume COST
                         # supersteps — the work live migration avoids
+TRACE_PATH = "BENCH_serve_trace.json"   # Chrome trace artifact (CI upload)
 
 
 def _bench_cfg():
@@ -196,12 +205,16 @@ def _drive_ttft(engine):
         for _, req, is_short in schedule
         if is_short and req.rid in first_t
     ]
+    # Same samples through the metrics registry's fixed-bucket histogram:
+    # the registry quantiles must agree with numpy's to within a bucket,
+    # proving the Prometheus/merged view reports the numbers the bench does.
+    reg_p50, reg_p99 = quantiles_from_values(shorts, (0.5, 0.99))
     return (float(np.percentile(shorts, 50)),
             float(np.percentile(shorts, 99)), 1e3 * max_step,
-            max(per_step_prefill.values(), default=0))
+            max(per_step_prefill.values(), default=0), reg_p50, reg_p99)
 
 
-def _mk_skew_engines(cfg, params):
+def _mk_skew_engines(cfg, params, tracer=None):
     """One fabric: identical paged replicas whose pool fits ~2 full-length
     sequences with lookahead, not 4. pad_len == max_seq keeps every
     recompute prefill on ONE trace so wall-clock compares engines, not
@@ -211,12 +224,13 @@ def _mk_skew_engines(cfg, params):
                pad_len=MAX_SEQ, steps_per_sync=STEPS_PER_SYNC, paged=True,
                block_size=PAGED_BS, num_blocks=SKEW_BLOCKS,
                prefill_chunk=SKEW_CHUNK,
-               token_budget=SKEW_SLOTS * STEPS_PER_SYNC)
-        for _ in range(SKEW_REPLICAS)
+               token_budget=SKEW_SLOTS * STEPS_PER_SYNC,
+               tracer=tracer, replica_id=i)
+        for i in range(SKEW_REPLICAS)
     ]
 
 
-def _drive_skew(engines, migrate, rid0=0):
+def _drive_skew(engines, migrate, rid0=0, tracer=None):
     """All requests land on replica 0 and are admitted there BEFORE the
     balancer runs — the wedged state: queue empty, every slot busy on a
     long sequence, N-1 cold replicas idle. Queue-only stealing can only
@@ -225,7 +239,7 @@ def _drive_skew(engines, migrate, rid0=0):
     migration sheds running sequences with their KV intact at the first
     balance pass. Returns (makespan_s, supersteps, preemptions,
     migrations)."""
-    bal = GLBReplicaBalancer(engines, migrate=migrate)
+    bal = GLBReplicaBalancer(engines, migrate=migrate, tracer=tracer)
     reqs = [Request(rid=rid0 + r, prompt=[3, r + 1, 4],
                     max_new=SKEW_MAX_NEW) for r in range(SKEW_SLOTS)]
     for r in reqs:
@@ -240,13 +254,16 @@ def _drive_skew(engines, migrate, rid0=0):
     return dt, bal.supersteps, preempts, bal.migrations
 
 
-def _skew_arm(cfg, params, migrate):
+def _skew_arm(cfg, params, migrate, tracer=None):
     """Warm run on fresh engines (compiles every trace the arm hits),
     then the timed run REUSES the drained engines so both arms measure
-    steady-state scheduling, not per-engine jit closures compiling."""
-    engines = _mk_skew_engines(cfg, params)
-    _drive_skew(engines, migrate, rid0=10_000)
-    return _drive_skew(engines, migrate, rid0=0)
+    steady-state scheduling, not per-engine jit closures compiling.
+    ``tracer`` records BOTH runs (the warm wave reads as a second
+    request batch in the artifact); scheduling is deterministic so the
+    gated superstep/preemption counts are tracer-independent."""
+    engines = _mk_skew_engines(cfg, params, tracer=tracer)
+    _drive_skew(engines, migrate, rid0=10_000, tracer=tracer)
+    return _drive_skew(engines, migrate, rid0=0, tracer=tracer)
 
 
 def run():
@@ -264,6 +281,21 @@ def run():
                        pad_len=8, steps_per_sync=STEPS_PER_SYNC),
         lambda e: _drive(e, e.step),
     )
+
+    # Observability overhead: the identical fori_loop workload with a
+    # LIVE Tracer (engine-step spans, load/pool counters, request
+    # lifecycle events, metrics observations). tracer-off IS tps_new —
+    # the disabled path is one attribute check on NULL_TRACER. The
+    # deterministic invariant is syncs/token: tracing must add ZERO
+    # host syncs (events are host-side dict appends, never device
+    # drains); tokens/s overhead gates advisorily in compare.py.
+    tps_on, spt_on = _best_of(
+        lambda: Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ,
+                       pad_len=8, steps_per_sync=STEPS_PER_SYNC,
+                       tracer=Tracer()),
+        lambda e: _drive(e, e.step),
+    )
+    obs_overhead = 100.0 * (1.0 - tps_on / max(tps_new, 1e-9))
 
     # Paged pool, same workload and same KV rows as the contiguous engine:
     # tokens/s should track the contiguous fast path (the pool adds a
@@ -314,10 +346,10 @@ def run():
     # unbounded per-step prefill); the chunked arm bounds every step by
     # the shared token budget.
     ttft_kw = dict(pool_kw, pad_len=MAX_SEQ)
-    p50_nc_t, p99_nc_t, step_nc, pf_nc = _drive_ttft(
+    p50_nc_t, p99_nc_t, step_nc, pf_nc, rp50_nc, rp99_nc = _drive_ttft(
         Engine(cfg, params, prefill_chunk=MAX_SEQ, **ttft_kw)
     )
-    p50_ck, p99_ck, step_ck, pf_ck = _drive_ttft(
+    p50_ck, p99_ck, step_ck, pf_ck, rp50_ck, rp99_ck = _drive_ttft(
         Engine(cfg, params, prefill_chunk=TTFT_CHUNK,
                token_budget=SLOTS * STEPS_PER_SYNC, **ttft_kw)
     )
@@ -326,7 +358,17 @@ def run():
     # in SUPERSTEPS is the deterministic acceptance metric (greedy
     # decode + deterministic matching); wall-clock rides along.
     dt_q, steps_q, pre_q, _ = _skew_arm(cfg, params, migrate=False)
-    dt_m, steps_m, pre_m, migs = _skew_arm(cfg, params, migrate=True)
+    # The live-migration arm doubles as the trace artifact: the whole
+    # fabric run (admissions, preemptions, steal/migration timeline)
+    # lands in BENCH_serve_trace.json for the CI upload. Scheduling is
+    # deterministic, so the gated superstep counts are unaffected; only
+    # the advisory wall-clock column carries the (small) tracer cost.
+    tracer = Tracer()
+    dt_m, steps_m, pre_m, migs = _skew_arm(cfg, params, migrate=True,
+                                           tracer=tracer)
+    tracer.write(TRACE_PATH)
+    problems = validate_chrome_trace(tracer.to_chrome())
+    assert not problems, problems
 
     # syncs per decoded *position* is the architectural constant: the
     # legacy loop drains every position (1.0), the fori_loop engine drains
@@ -339,6 +381,11 @@ def run():
          f"tok_s={tps_new:.1f};syncs_per_tok={spt_new:.3f};"
          f"syncs_per_pos={1.0 / STEPS_PER_SYNC:.3f};"
          f"speedup={tps_new / max(tps_old, 1e-9):.2f}x"),
+        ("serve_obs_overhead", 1e6 / max(tps_on, 1e-9),
+         f"tok_s_on={tps_on:.1f};tok_s_off={tps_new:.1f};"
+         f"overhead_pct={obs_overhead:.1f};"
+         f"syncs_per_tok_on={spt_on:.3f};"
+         f"syncs_per_tok_off={spt_new:.3f}"),
         ("serve_paged_loop", 1e6 / max(tps_pg, 1e-9),
          f"tok_s={tps_pg:.1f};syncs_per_tok={spt_pg:.3f};"
          f"vs_contiguous={tps_pg / max(tps_new, 1e-9):.2f}x;"
@@ -358,11 +405,13 @@ def run():
         ("serve_ttft_nochunk", 1e3 * p50_nc_t,
          f"short_ttft_p50_ms={p50_nc_t:.1f};"
          f"short_ttft_p99_ms={p99_nc_t:.1f};"
+         f"reg_p50_ms={rp50_nc:.1f};reg_p99_ms={rp99_nc:.1f};"
          f"max_step_ms={step_nc:.1f};"
          f"max_prefill_tokens_per_step={pf_nc};"
          f"long_prompt={len(TTFT_LONG_PROMPT)}"),
         ("serve_ttft_chunked", 1e3 * p50_ck,
          f"short_ttft_p50_ms={p50_ck:.1f};short_ttft_p99_ms={p99_ck:.1f};"
+         f"reg_p50_ms={rp50_ck:.1f};reg_p99_ms={rp99_ck:.1f};"
          f"max_step_ms={step_ck:.1f};"
          f"max_prefill_tokens_per_step={pf_ck};chunk={TTFT_CHUNK};"
          f"p99_vs_nochunk={p99_ck / max(p99_nc_t, 1e-9):.2f}x;"
@@ -375,7 +424,8 @@ def run():
          f"makespan_s={dt_m:.2f};makespan_steps={steps_m};"
          f"preemptions={pre_m};migrations={migs};"
          f"steps_vs_queue_steal={steps_m / max(steps_q, 1):.2f}x;"
-         f"wall_vs_queue_steal={dt_m / max(dt_q, 1e-9):.2f}x"),
+         f"wall_vs_queue_steal={dt_m / max(dt_q, 1e-9):.2f}x;"
+         f"trace_events={len(tracer.events)};trace={TRACE_PATH}"),
     ]
 
 

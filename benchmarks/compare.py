@@ -73,10 +73,23 @@ GATES = [
     Gate("serve", "serve_skew_queue_steal", "preemptions", "higher", 0.5,
          note="the queue-only arm must still thrash (else the scenario "
               "no longer exercises the contrast)"),
+    # Tracing must never add host syncs — events are host-side dict
+    # appends. Deterministic, so it gates hard like the off-arm's.
+    Gate("serve", "serve_obs_overhead", "syncs_per_tok_on", "lower", 0.01,
+         note="a live tracer adds ZERO device drains"),
     # --- serve: wall-clock, loose + advisory --------------------------
     Gate("serve", "serve_fori_loop", "tok_s", "higher", 0.60,
          note="decode throughput cliff detector", hard=False),
     Gate("serve", "serve_paged_loop", "tok_s", "higher", 0.60,
+         hard=False),
+    # Tracer-on overhead vs the committed baseline: warn past +5 points
+    # (wall-clock on a shared runner, so advisory — the contract itself
+    # lives in the tracer-off row and the syncs gate above).
+    Gate("serve", "serve_obs_overhead", "overhead_pct", "lower", 0.0,
+         abs_tol=5.0, note="tracer-on tokens/s cost (% points)",
+         hard=False),
+    Gate("serve", "serve_obs_overhead", "tok_s_off", "higher", 0.60,
+         note="tracer-off throughput must track serve_fori_loop",
          hard=False),
     # --- kernels: oracle agreement is deterministic -------------------
     Gate("kernels", "attn_chunked_1k", "err", "lower", 0.0, abs_tol=1e-5,

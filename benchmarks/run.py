@@ -13,19 +13,29 @@ machine-readable (CI uploads the kernels and serve suites per PR).
                            paged KV pool vs contiguous slots (throughput +
                            max concurrency at fixed HBM)
 
+Each ``--json`` artifact carries a ``meta`` block — wall-clock start/end
+(unix), host name, jax version, and the observability layer's
+``clock_sync`` anchor (unix ↔ ``perf_counter`` µs) — so a bench row and
+a ``BENCH_serve_trace.json`` event from the same run can be placed on
+one timeline.
+
 Usage: python benchmarks/run.py [suite-substring] [--json]
 """
 import json
+import platform
 import sys
 import time
 import traceback
 
 
 def main() -> None:
+    import jax
+
     from benchmarks import (
         bench_bc, bench_bc_distribution, bench_kernels, bench_moe_glb,
         bench_params, bench_serve, bench_uts,
     )
+    from repro.obs import clock_sync
 
     modules = [
         ("uts_scaling", bench_uts),
@@ -61,9 +71,19 @@ def main() -> None:
             failed.append(name)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         if as_json:
+            meta = {
+                "started_unix": t0,
+                "ended_unix": time.time(),
+                "host": platform.node(),
+                "jax_version": jax.__version__,
+                # same clock domain the tracer stamps events in: lets a
+                # trace ts line up against this suite's wall-clock rows
+                "clock_sync": clock_sync(),
+            }
             path = f"BENCH_{name}.json"
             with open(path, "w") as f:
-                json.dump({"suite": name, "rows": rows}, f, indent=2)
+                json.dump({"suite": name, "meta": meta, "rows": rows},
+                          f, indent=2)
             print(f"# wrote {path}", flush=True)
     if failed:
         # A crashing suite must fail CI, not just leave an ERROR row in

@@ -23,6 +23,13 @@ tier: a replica whose queue is empty but whose slots are all busy sheds
 decoding resumes there greedy-token-identically (DESIGN.md §9). The
 run ends via GLB termination detection (the balance pass's load vector)
 and prints the fabric-level merged stats report.
+
+``--trace PATH`` records the whole run — request lifecycle spans across
+replicas, engine steps, prefill chunks, steal/migration events — as
+Chrome trace_event JSON: open the file at https://ui.perfetto.dev.
+``--metrics`` prints the merged fabric metrics registry (TTFT / TPOT /
+queue-wait percentiles and all counters) in Prometheus text format at
+exit. See DESIGN.md §10 and README "Tracing a serving run".
 """
 import argparse
 import time
@@ -31,6 +38,7 @@ import jax
 
 from repro.configs import ARCHS
 from repro.models import init_lm
+from repro.obs import Tracer, validate_chrome_trace
 from repro.serve.engine import Engine, GLBReplicaBalancer, Request
 
 SYSTEM_PROMPT = [7, 3, 9, 2, 5, 8, 6, 4, 1, 2, 3, 4, 9, 9, 8, 7]
@@ -50,6 +58,12 @@ def main():
                     help="steal LIVE sequences (KV migration) when a "
                          "victim's queue is empty but its slots are "
                          "saturated (requires --paged)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Perfetto-loadable Chrome trace JSON "
+                         "of the run to PATH")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the merged fabric metrics registry "
+                         "(Prometheus text format) at exit")
     args = ap.parse_args()
 
     cfg = ARCHS["tinyllama-1.1b"].smoke()
@@ -62,8 +76,11 @@ def main():
     elif args.prefix_cache or args.prefill_chunk or args.migrate:
         ap.error("--prefix-cache / --prefill-chunk / --migrate "
                  "require --paged")
-    engines = [Engine(cfg, params, **kw) for _ in range(args.replicas)]
-    bal = GLBReplicaBalancer(engines, migrate=args.migrate)
+    # ONE tracer for the whole fabric: request spans cross replicas.
+    tracer = Tracer() if args.trace else None
+    engines = [Engine(cfg, params, tracer=tracer, replica_id=i, **kw)
+               for i in range(args.replicas)]
+    bal = GLBReplicaBalancer(engines, migrate=args.migrate, tracer=tracer)
 
     # Heterogeneous lengths: the first few requests run long, so replicas
     # that drew short ones go hungry while a peer is still wedged on
@@ -120,6 +137,15 @@ def main():
     print(bal.report())
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.prompt} -> {r.out}")
+    if args.trace:
+        tracer.write(args.trace)
+        problems = validate_chrome_trace(tracer.to_chrome())
+        assert not problems, problems
+        print(f"\nwrote {len(tracer.events)} trace events to "
+              f"{args.trace} — load it at https://ui.perfetto.dev")
+    if args.metrics:
+        print("\n# merged fabric metrics registry")
+        print(bal.merged_metrics().render_prometheus(), end="")
 
 
 if __name__ == "__main__":

@@ -1,26 +1,41 @@
 """UTS-G (paper §2.5): count a geometric tree under GLB, print the paper's
 logging output + throughput/efficiency, compare against the oracle.
 
-    PYTHONPATH=src python examples/uts_demo.py [depth] [P]
+    PYTHONPATH=src python examples/uts_demo.py [depth] [P] [--trace PATH]
+
+``--trace PATH`` runs the superstep loop under the observability tracer
+(one jitted superstep per host iteration — numerically identical to the
+fully-jitted loop) and writes Chrome trace_event JSON: per-superstep
+spans plus the ``glb_load`` size-vector counter track, the same trace
+vocabulary the serving fabric emits (examples/serve_lm.py --trace), so
+taskbag runs and LM serving read in one Perfetto UI.
 """
-import sys
+import argparse
 import time
 
 import numpy as np
 
 from repro.core import GLB, GLBParams
+from repro.obs import Tracer, validate_chrome_trace
 from repro.problems.uts import uts_oracle, uts_problem
 
 
 def main():
-    depth = int(sys.argv[1]) if len(sys.argv) > 1 else 9
-    P = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+    ap = argparse.ArgumentParser()
+    ap.add_argument("depth", type=int, nargs="?", default=9)
+    ap.add_argument("P", type=int, nargs="?", default=8)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Perfetto-loadable Chrome trace JSON "
+                         "of the superstep loop to PATH")
+    args = ap.parse_args()
+    depth, P = args.depth, args.P
 
     prob = uts_problem(b0=4.0, depth=depth, seed=19)
     params = GLBParams(n=256, w=2, steal_k=64)
     glb = GLB(prob, params, P=P)
+    tracer = Tracer() if args.trace else None
     t0 = time.time()
-    count = int(glb.run(seed=0))
+    count = int(glb.run(seed=0, tracer=tracer))
     dt = time.time() - t0
 
     oracle = uts_oracle(b0=4.0, depth=depth, seed=19)
@@ -34,6 +49,12 @@ def main():
     print(f"workload distribution: mean={proc.mean():.0f} "
           f"std={proc.std():.1f} (std/mean={proc.std()/proc.mean():.3f})")
     print(glb.stats_summary())
+    if args.trace:
+        tracer.write(args.trace)
+        problems = validate_chrome_trace(tracer.to_chrome())
+        assert not problems, problems
+        print(f"wrote {len(tracer.events)} trace events to {args.trace} "
+              f"— load it at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -53,7 +53,7 @@ def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
         return False, (
             "skipped: pure full-attention arch — a 524288-token KV cache "
             "decode is reserved for ssm/hybrid archs per spec "
-            "(DESIGN.md §11)"
+            "(DESIGN.md §12)"
         )
     return True, ""
 

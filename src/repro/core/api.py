@@ -55,9 +55,16 @@ class GLB:
         self.routing = routing
         self.last_run = None
 
-    def run(self, seed: int = 0) -> Any:
+    def run(self, seed: int = 0, tracer: Any = None) -> Any:
+        """Drive the problem to completion. ``tracer`` (sim mode only):
+        a ``repro.obs.Tracer`` records per-superstep spans and the load
+        vector — see ``run_sim``; the untraced path is unchanged (fully
+        jitted ``lax.while_loop``)."""
         if self.mode == "sim":
-            out = run_sim(self.problem, self.P, self.params, seed=seed)
+            out = run_sim(self.problem, self.P, self.params, seed=seed,
+                          tracer=tracer)
+        elif tracer is not None and getattr(tracer, "enabled", False):
+            raise ValueError("tracing is supported in mode='sim' only")
         else:
             out = run_shardmap(
                 self.problem, self.mesh, self.params, seed=seed,

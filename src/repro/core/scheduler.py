@@ -59,8 +59,16 @@ def run_sim(
     params: GLBParams = GLBParams(),
     seed: int = 0,
     max_supersteps: Optional[int] = None,
+    tracer=None,
 ) -> GLBRun:
-    """Execute `problem` on P simulated places. Fully jit-compiled."""
+    """Execute `problem` on P simulated places. Fully jit-compiled.
+
+    With an enabled ``tracer`` (``repro.obs.Tracer``), the SAME jitted
+    superstep body runs under a host loop instead of ``lax.while_loop``,
+    emitting one ``superstep`` span and a ``glb_load`` counter per
+    iteration (one device->host sync each — the traced path trades a
+    sync per superstep for the timeline; results are numerically
+    identical, asserted in ``tests/test_obs.py``)."""
     z = params.resolve_z(P)
     buddies = jnp.asarray(lifeline_buddies(P, z))
     max_steps = max_supersteps or params.max_supersteps
@@ -69,11 +77,11 @@ def run_sim(
     vsplit = jax.vmap(problem.split, in_axes=(0, None))
     vmerge = jax.vmap(problem.merge)
 
-    def _run(key):
+    def init_carry():
         states, bags = jax.vmap(lambda p: problem.init_place(p, P))(
             jnp.arange(P, dtype=jnp.int32)
         )
-        carry = dict(
+        return dict(
             states=states,
             bags=bags,
             pending=jnp.zeros((P, P), bool),
@@ -82,62 +90,59 @@ def run_sim(
             stats=init_stats(P),
         )
 
-        def cond(c):
-            return (~c["done"]) & (c["step"] < max_steps)
+    def body(c, key):
+        # 1. process
+        states, bags, processed = vprocess(c["states"], c["bags"], params.n)
+        sizes = bags["size"]
+        # In-progress, non-stealable work held in state (paper §2.6's
+        # interruptable state machine) counts for hunger/termination.
+        if problem.work_in_state is not None:
+            pend = jax.vmap(problem.work_in_state)(states).astype(jnp.int32)
+        else:
+            pend = jnp.zeros_like(sizes)
+        hungry = (sizes + pend) == 0
 
-        def body(c):
-            # 1. process
-            states, bags, processed = vprocess(c["states"], c["bags"], params.n)
-            sizes = bags["size"]
-            # In-progress, non-stealable work held in state (paper §2.6's
-            # interruptable state machine) counts for hunger/termination.
-            if problem.work_in_state is not None:
-                pend = jax.vmap(problem.work_in_state)(states).astype(jnp.int32)
-            else:
-                pend = jnp.zeros_like(sizes)
-            hungry = (sizes + pend) == 0
+        # 2-3. match thieves to victims (replicated-deterministic)
+        k_step = jax.random.fold_in(key, c["step"])
+        m = match_steals(sizes, hungry, c["pending"], k_step, buddies, params)
 
-            # 2-3. match thieves to victims (replicated-deterministic)
-            k_step = jax.random.fold_in(key, c["step"])
-            m = match_steals(sizes, hungry, c["pending"], k_step, buddies, params)
+        # 4. transfer: victims split, packets routed, thieves merge
+        bags_split, packets = vsplit(bags, params.steal_k)
+        give = m.dst >= 0
+        packets["count"] = jnp.where(give, packets["count"], 0)
+        bags = _select(give, bags_split, bags)
 
-            # 4. transfer: victims split, packets routed, thieves merge
-            bags_split, packets = vsplit(bags, params.steal_k)
-            give = m.dst >= 0
-            packets["count"] = jnp.where(give, packets["count"], 0)
-            bags = _select(give, bags_split, bags)
+        srcc = jnp.clip(m.src, 0, P - 1)
+        recv = jax.tree.map(lambda x: x[srcc], packets)
+        recv["count"] = jnp.where(m.src >= 0, recv["count"], 0)
+        bags = vmerge(bags, recv)
 
-            srcc = jnp.clip(m.src, 0, P - 1)
-            recv = jax.tree.map(lambda x: x[srcc], packets)
-            recv["count"] = jnp.where(m.src >= 0, recv["count"], 0)
-            bags = vmerge(bags, recv)
+        # 5. termination: if no work existed post-process, none was
+        # transferred either (victims need size>0), so this is exact.
+        done = (sizes.sum() + pend.sum()) == 0
 
-            # 5. termination: if no work existed post-process, none was
-            # transferred either (victims need size>0), so this is exact.
-            done = (sizes.sum() + pend.sum()) == 0
+        stats = update_stats(
+            c["stats"],
+            processed=processed,
+            hungry=hungry,
+            src=m.src,
+            via_lifeline=m.via_lifeline,
+            dst=m.dst,
+            sent=packets["count"],
+            recv=recv["count"],
+            registered=(m.pending & ~c["pending"]).any(axis=1),
+            sizes=bags["size"],
+        )
+        return dict(
+            states=states,
+            bags=bags,
+            pending=m.pending,
+            step=c["step"] + 1,
+            done=done,
+            stats=stats,
+        )
 
-            stats = update_stats(
-                c["stats"],
-                processed=processed,
-                hungry=hungry,
-                src=m.src,
-                via_lifeline=m.via_lifeline,
-                dst=m.dst,
-                sent=packets["count"],
-                recv=recv["count"],
-                registered=(m.pending & ~c["pending"]).any(axis=1),
-                sizes=bags["size"],
-            )
-            return dict(
-                states=states,
-                bags=bags,
-                pending=m.pending,
-                step=c["step"] + 1,
-                done=done,
-                stats=stats,
-            )
-
-        out = jax.lax.while_loop(cond, body, carry)
+    def finish(out) -> GLBRun:
         per_place = jax.vmap(problem.result)(out["states"])
         result = reduce_result(per_place, problem.reduce_op)
         return GLBRun(
@@ -148,4 +153,34 @@ def run_sim(
             converged=out["done"],
         )
 
-    return jax.jit(_run)(jax.random.key(seed))
+    if tracer is None or not getattr(tracer, "enabled", False):
+        def _run(key):
+            def cond(c):
+                return (~c["done"]) & (c["step"] < max_steps)
+
+            out = jax.lax.while_loop(cond, lambda c: body(c, key),
+                                     init_carry())
+            return finish(out)
+
+        return jax.jit(_run)(jax.random.key(seed))
+
+    # Traced path: host loop around the SAME jitted body — identical key
+    # folding and superstep recurrence, so results match the jitted
+    # while_loop bit-for-bit; the loop condition mirrors ``cond`` above.
+    tracer.process_name(0, f"GLB sim ({P} places)")
+    tracer.thread_name(0, 0, "supersteps")
+    step_fn = jax.jit(body)
+    key = jax.random.key(seed)
+    carry = jax.jit(init_carry)()
+    while (not bool(carry["done"])) and int(carry["step"]) < max_steps:
+        with tracer.span("superstep", pid=0,
+                         args={"n": int(carry["step"])}):
+            carry = step_fn(carry, key)
+            sizes = jax.device_get(carry["bags"]["size"])
+            vals = {"total": float(sizes.sum()),
+                    "hungry": float((sizes == 0).sum())}
+            if P <= 16:
+                vals.update({f"place{i}": float(v)
+                             for i, v in enumerate(sizes)})
+            tracer.counter("glb_load", vals, pid=0)
+    return jax.jit(finish)(carry)

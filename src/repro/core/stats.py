@@ -80,13 +80,27 @@ def merge_place_stats(per_place) -> Dict[str, Dict[str, float]]:
     return out
 
 
-def fabric_summary(per_place, title: str = "fabric") -> str:
+def fabric_summary(per_place, title: str = "fabric",
+                   places: int = None) -> str:
     """Human-readable merged report, one line per field — the serving
     analogue of ``summarize`` (which formats the executor's device-array
     stats). Includes the paper's imbalance metric over whichever field
-    carries the work count (``processed`` or ``tokens_out``)."""
-    merged = merge_place_stats(per_place)
-    P = len(per_place)
+    carries the work count (``processed`` or ``tokens_out``).
+
+    Accepts either a list of per-place stat dicts (merged here) or an
+    ALREADY-merged mapping ``field -> {total, mean, max, argmax}`` such
+    as the replica balancer's ``collect()`` — underscore-prefixed
+    sub-reports (``"_balancer"``) are skipped, and ``places`` names the
+    place count the merge no longer carries."""
+    if isinstance(per_place, dict):
+        merged = {f: m for f, m in per_place.items()
+                  if isinstance(m, dict) and not f.startswith("_")}
+        P = places if places is not None else 1 + max(
+            (int(m.get("argmax", 0)) for m in merged.values()), default=0
+        )
+    else:
+        merged = merge_place_stats(per_place)
+        P = len(per_place)
     lines = [f"{title}: {P} places"]
     for f, m in merged.items():
         lines.append(

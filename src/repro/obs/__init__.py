@@ -1,0 +1,34 @@
+"""repro.obs — zero-dependency tracing + metrics for the whole fabric.
+
+The paper's §2.4 logging counters (``core.stats``) cover the GLB core;
+this package is the layer above it, threaded through the serve engine,
+continuous-batching scheduler, radix cache, and replica balancer:
+
+  trace.py    — Chrome trace_event spans/instants/counters (Perfetto),
+                request-lifecycle async spans keyed by request id,
+                NullTracer disabled default (one attribute check).
+  metrics.py  — counters / gauges / fixed-bucket histograms with
+                snapshot()/merged() compatible with
+                core.stats.merge_place_stats, Prometheus rendering.
+"""
+from .trace import (NULL_TRACER, NullTracer, Tracer, clock_sync, now_us,
+                    validate_chrome_trace)
+from .metrics import (DEFAULT_BYTE_BUCKETS, DEFAULT_MS_BUCKETS, Counter,
+                      Gauge, Histogram, MetricsRegistry,
+                      quantiles_from_values)
+
+__all__ = [
+    "NULL_TRACER",
+    "NullTracer",
+    "Tracer",
+    "clock_sync",
+    "now_us",
+    "validate_chrome_trace",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "quantiles_from_values",
+    "DEFAULT_MS_BUCKETS",
+    "DEFAULT_BYTE_BUCKETS",
+]

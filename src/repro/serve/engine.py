@@ -69,6 +69,8 @@ from repro.core.autotune import paged_block_kv
 from repro.models import (decode_step, forward, make_cache,
                           make_paged_cache, sample_tokens)
 from repro.models.config import ModelConfig
+from repro.obs import (DEFAULT_BYTE_BUCKETS, NULL_TRACER, MetricsRegistry,
+                       now_us)
 
 from .kvpool import KVPool, PoolExhausted
 from .radix import RadixPrefixCache
@@ -82,6 +84,12 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Observability stamps (obs clock domain, µs): submission, the last
+    # time the request entered a queue (submit / preempt / migrate
+    # requeue), and the first output token (TTFT anchor).
+    t_submit: float = 0.0
+    t_queued: float = 0.0
+    t_first: float = 0.0
 
 
 @dataclasses.dataclass
@@ -276,9 +284,23 @@ class Engine:
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
                  prefill_chunk: Optional[int] = None,
-                 shed_policy: str = "youngest"):
+                 shed_policy: str = "youngest",
+                 tracer=None, metrics=None, replica_id: int = 0):
         self.cfg = cfg
         self.params = params
+        # Observability (DESIGN.md §10): tracer defaults to the no-op
+        # NullTracer — every emit site guards on `.enabled`, so the
+        # disabled hot path pays one attribute check. The metrics
+        # registry is always real (per-request observations only, never
+        # per token); `stats()` is a view over it. A fabric shares ONE
+        # tracer (request spans cross replicas) but each replica keeps
+        # its own registry, merged at result collection.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.replica_id = replica_id
+        if self.tracer.enabled:
+            self.tracer.process_name(replica_id, f"replica {replica_id}")
+            self.tracer.thread_name(replica_id, 0, "engine")
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.pad_len = pad_len
@@ -322,12 +344,15 @@ class Engine:
                     f"attention KV, not family={cfg.family!r}"
                 )
             if prefix_cache:
-                self.prefix_cache = RadixPrefixCache(self.pool)
+                self.prefix_cache = RadixPrefixCache(
+                    self.pool, tracer=self.tracer, pid=replica_id
+                )
             self.sched = ContinuousBatchingScheduler(
                 self.pool, max_slots, lookahead=steps_per_sync,
                 max_seq=max_seq, watermark_blocks=watermark_blocks,
                 token_budget=token_budget, prefill_chunk=prefill_chunk,
                 cache=self.prefix_cache, shed_policy=shed_policy,
+                tracer=self.tracer, metrics=self.metrics, pid=replica_id,
             )
             self.cache = make_paged_cache(
                 cfg, self.num_blocks, bs, max_slots, dtype=jnp.float32
@@ -356,6 +381,18 @@ class Engine:
         # wedge its slot in a zero-token prefill — reject it loudly.
         if not req.prompt:
             raise ValueError(f"request {req.rid} has an empty prompt")
+        # A stolen request is re-submitted on the thief: keep the
+        # original submission stamp (TTFT measures from first submit) and
+        # count it once, but restart its queue-wait clock.
+        if not req.t_submit:
+            req.t_submit = now_us()
+            self.metrics.counter("requests_submitted").inc()
+        req.t_queued = now_us()
+        if self.tracer.enabled:
+            self.tracer.req_begin(req.rid, pid=self.replica_id,
+                                  args={"prompt_tokens": len(req.prompt),
+                                        "max_new": req.max_new})
+            self.tracer.req_phase(req.rid, "queued", pid=self.replica_id)
         self.queue.append(req)
 
     @property
@@ -391,6 +428,17 @@ class Engine:
         for i in range(self.max_slots):
             if self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
+                t_adm = now_us()
+                if req.t_queued:
+                    self.metrics.histogram("queue_wait_ms").observe(
+                        (t_adm - req.t_queued) / 1e3
+                    )
+                if self.tracer.enabled:
+                    self.tracer.req_phase(req.rid, "prefill",
+                                          pid=self.replica_id,
+                                          args={"slot": i})
+                    self.tracer.begin("prefill", pid=self.replica_id,
+                                      args={"rid": req.rid})
                 true_len = min(len(req.prompt), self.pad_len)
                 toks = np.zeros((1, self.pad_len), np.int32)
                 toks[0, :true_len] = req.prompt[:true_len]
@@ -407,12 +455,35 @@ class Engine:
                 self.budget[i] = req.max_new
                 self.tokens[i, 0] = first
                 self.tokens_out += 1
+                req.t_first = now_us()
+                self.metrics.histogram("prefill_chunk_ms").observe(
+                    (req.t_first - t_adm) / 1e3
+                )
+                if req.t_submit:
+                    self.metrics.histogram("ttft_ms").observe(
+                        (req.t_first - req.t_submit) / 1e3
+                    )
+                if self.tracer.enabled:
+                    self.tracer.end(pid=self.replica_id)
+                    self.tracer.req_phase(req.rid, "decode",
+                                          pid=self.replica_id)
 
     def _finish_check(self, i: int, req: Request):
         if (len(req.out) > req.max_new
                 or self.lens[i] >= self.max_seq - 1
                 or self.budget[i] <= 0):
             req.done = True
+            t_fin = now_us()
+            self.metrics.counter("requests_finished").inc()
+            if req.t_first:
+                # Steady-state decode pace: TTFT is excluded, and the
+                # first token itself emits no inter-token gap.
+                self.metrics.histogram("tpot_ms").observe(
+                    (t_fin - req.t_first) / 1e3 / max(len(req.out) - 1, 1)
+                )
+            if self.tracer.enabled:
+                self.tracer.req_end(req.rid, pid=self.replica_id,
+                                    args={"tokens": len(req.out)})
             if self.paged and self.prefix_cache is not None:
                 # Thread the written prefix into the radix cache BEFORE
                 # freeing: the tree takes refs, free drops the seq's, and
@@ -470,6 +541,13 @@ class Engine:
         if req.out:                     # resume after preemption
             self.tokens[slot, 0] = req.out[-1]
             self.budget[slot] = req.max_new - (len(req.out) - 1)
+            if self.tracer.enabled:
+                self.tracer.req_instant(req.rid, "resumed",
+                                        pid=self.replica_id,
+                                        args={"slot": slot,
+                                              "out": len(req.out)})
+                self.tracer.req_phase(req.rid, "decode",
+                                      pid=self.replica_id)
         else:
             first = int(first)          # one sync per fresh admission
             self.host_syncs += 1
@@ -477,6 +555,14 @@ class Engine:
             self.tokens[slot, 0] = first
             self.budget[slot] = req.max_new
             self.tokens_out += 1
+            req.t_first = now_us()
+            if req.t_submit:
+                self.metrics.histogram("ttft_ms").observe(
+                    (req.t_first - req.t_submit) / 1e3
+                )
+            if self.tracer.enabled:
+                self.tracer.req_phase(req.rid, "decode",
+                                      pid=self.replica_id)
 
     def _admit_paged(self, slot: int, req: Request):
         """Prefill a scheduler-admitted request into ``slot``. Fresh
@@ -497,11 +583,23 @@ class Engine:
         bt_scatter = np.full(self.max_blocks, self.num_blocks, np.int32)
         bt_scatter[:n_pb] = table[:n_pb]
         self._key, sub = jax.random.split(self._key)
+        t0 = now_us()
+        if self.tracer.enabled:
+            self.tracer.thread_name(self.replica_id, 1 + slot,
+                                    f"slot {slot}")
+            self.tracer.begin("prefill", pid=self.replica_id,
+                              tid=1 + slot,
+                              args={"rid": req.rid, "tokens": true_len})
         first, self.cache, self._row = self._prefill_paged(
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(bt_scatter), slot, self._row, true_len, sub,
         )
         self._arm_decode(slot, req, first)
+        if self.tracer.enabled:
+            self.tracer.end(pid=self.replica_id, tid=1 + slot)
+        self.metrics.histogram("prefill_chunk_ms").observe(
+            (now_us() - t0) / 1e3
+        )
         self.lens[slot] = true_len
 
     def _run_prefill_chunk(self, slot: int, req: Request, start: int,
@@ -518,9 +616,22 @@ class Engine:
         bt = np.full(self.max_blocks, self.num_blocks, np.int32)
         bt[: len(table)] = table
         self._key, sub = jax.random.split(self._key)
+        t0 = now_us()
+        if self.tracer.enabled:
+            self.tracer.thread_name(self.replica_id, 1 + slot,
+                                    f"slot {slot}")
+            self.tracer.begin("prefill_chunk", pid=self.replica_id,
+                              tid=1 + slot,
+                              args={"rid": req.rid, "start": start,
+                                    "end": end, "last": last})
         first, self.cache = self._prefill_chunk_fn(
             self.params, jnp.asarray(toks), self.cache, jnp.asarray(bt),
             jnp.int32(start), sub,
+        )
+        if self.tracer.enabled:
+            self.tracer.end(pid=self.replica_id, tid=1 + slot)
+        self.metrics.histogram("prefill_chunk_ms").observe(
+            (now_us() - t0) / 1e3
         )
         self.pool.advance(req.rid, end)
         self.lens[slot] = end
@@ -567,6 +678,10 @@ class Engine:
         tokens = self._prefix_tokens(req)
         written = int(self.lens[slot])
         assert len(tokens) == written, (len(tokens), written)
+        t0 = now_us()
+        if self.tracer.enabled:
+            self.tracer.begin("migrate_out", pid=self.replica_id,
+                              args={"rid": req.rid, "written": written})
         kv = None
         if self.cfg.family not in ("ssm", "hybrid"):
             blocks, _ = self.pool.extract(req.rid)
@@ -583,14 +698,56 @@ class Engine:
         self.sched.release(req.rid)
         self.sched.slot_released(slot)
         self.migrations_out += 1
+        nbytes = (kv["k"].nbytes + kv["v"].nbytes) if kv else 0
+        self.metrics.histogram("migrate_pack_ms").observe(
+            (now_us() - t0) / 1e3
+        )
+        self.metrics.histogram(
+            "migration_bytes", DEFAULT_BYTE_BUCKETS
+        ).observe(nbytes)
+        if self.tracer.enabled:
+            self.tracer.end(pid=self.replica_id)
+            self.tracer.req_instant(req.rid, "migrated_out",
+                                    pid=self.replica_id,
+                                    args={"written": written,
+                                          "bytes": nbytes})
+            # The request is in flight: the victim opens the migrate
+            # phase, the thief's landing path closes it (span ownership
+            # travels with the request, DESIGN.md §10).
+            self.tracer.req_phase(req.rid, "migrate", pid=self.replica_id)
         return mig
 
     def _requeue_migrated(self, req: Request) -> None:
         # Front of the queue: the sequence was already running and must
         # not wait behind fresh arrivals (same rule as preemption).
+        req.t_queued = now_us()
+        if self.tracer.enabled:
+            self.tracer.req_phase(req.rid, "queued", pid=self.replica_id)
         self.queue.appendleft(req)
 
     def migrate_in(self, mig: Migration) -> str:
+        """Land a migrated sequence (span + landing metrics around
+        :meth:`_migrate_in`, which picks the mode — see its docstring)."""
+        t0 = now_us()
+        if self.tracer.enabled:
+            self.tracer.begin("migrate_in", pid=self.replica_id,
+                              args={"rid": mig.req.rid,
+                                    "written": mig.written})
+        try:
+            mode = self._migrate_in(mig)
+        finally:
+            if self.tracer.enabled:
+                self.tracer.end(pid=self.replica_id)
+        self.metrics.histogram("migrate_land_ms").observe(
+            (now_us() - t0) / 1e3
+        )
+        if self.tracer.enabled:
+            self.tracer.req_instant(mig.req.rid, "migrated_in",
+                                    pid=self.replica_id,
+                                    args={"mode": mode})
+        return mode
+
+    def _migrate_in(self, mig: Migration) -> str:
         """Land a migrated sequence. Three outcomes, best first:
 
         * ``"live"`` — a free slot and enough pool blocks: inject fresh
@@ -738,7 +895,32 @@ class Engine:
         """One engine iteration: admit, then `steps_per_sync` batched
         decode steps on device with ONE host drain at the end (idle slots
         carry lens=-1 and stay untouched). Paged engines delegate
-        admission/preemption to the continuous-batching scheduler."""
+        admission/preemption to the continuous-batching scheduler.
+        Traced runs wrap the iteration in an ``engine_step`` span and
+        emit load/pool counter tracks; the untraced path dispatches
+        straight to the implementation (one attribute check)."""
+        if not self.tracer.enabled:
+            return self._step_impl()
+        with self.tracer.span("engine_step", pid=self.replica_id,
+                              args={"step": self.steps}):
+            self._step_impl()
+            self.tracer.counter(
+                "load",
+                {"running": float(sum(s is not None for s in self.slots)),
+                 "queued": float(len(self.queue))},
+                pid=self.replica_id,
+            )
+            if self.paged:
+                ps = self.pool.stats()
+                self.tracer.counter(
+                    "pool",
+                    {"occupancy_pct": round(100 * ps.occupancy, 2),
+                     "available_blocks": float(self.pool.available_blocks),
+                     "watermark": float(self.sched.watermark)},
+                    pid=self.replica_id,
+                )
+
+    def _step_impl(self):
         if self.paged:
             return self._step_paged()
         self._admit()
@@ -784,8 +966,18 @@ class Engine:
     def stats(self) -> dict:
         """Per-replica counters for fabric-level result collection
         (``core.stats.merge_place_stats``). Numeric-only, flat — the
-        union across heterogeneous replicas merges field-wise."""
-        st = dict(
+        union across heterogeneous replicas merges field-wise.
+
+        A view over the metrics registry (DESIGN.md §10): engine /
+        scheduler / prefix-cache attribute counters sync into gauges
+        (idempotent ``set``, so repeated calls never double-count) and
+        the returned dict is the registry snapshot — which also carries
+        the live request histograms (``ttft_ms_*``, ``tpot_ms_*``,
+        ``queue_wait_ms_*``, ...) and counters observed at request
+        boundaries. One source of truth; no drift between ``stats()``,
+        ``collect()``, and a Prometheus scrape."""
+        m = self.metrics
+        sync = dict(
             tokens_out=self.tokens_out,
             steps=self.steps,
             host_syncs=self.host_syncs,
@@ -796,7 +988,7 @@ class Engine:
             migrations_recompute=self.migrations_recompute,
         )
         if self.paged:
-            st.update(
+            sync.update(
                 admissions=self.sched.admissions,
                 preemptions=self.sched.preemptions,
                 adoptions=self.sched.adoptions,
@@ -804,14 +996,20 @@ class Engine:
                 peak_occupancy_pct=round(100 * self.peak_occupancy, 1),
             )
         if self.prefix_cache is not None:
-            st.update(
-                cache_hits=self.prefix_cache.hits,
-                cache_misses=self.prefix_cache.misses,
-                tokens_reused=self.prefix_cache.tokens_reused,
-                cache_evictions=self.prefix_cache.evictions,
-                seeded_tokens=self.prefix_cache.seeded_tokens,
+            pc = self.prefix_cache
+            sync.update(
+                cache_hits=pc.hits,
+                cache_misses=pc.misses,
+                tokens_reused=pc.tokens_reused,
+                cache_evictions=pc.evictions,
+                seeded_tokens=pc.seeded_tokens,
+                # The one canonical hit-rate field (previously computed
+                # ad hoc with different names in benches and examples).
+                prefix_hit_rate_pct=round(100 * pc.hit_rate, 1),
             )
-        return st
+        for name, v in sync.items():
+            m.gauge(name).set(v)
+        return m.snapshot()
 
 
 class GLBReplicaBalancer:
@@ -848,10 +1046,20 @@ class GLBReplicaBalancer:
 
     def __init__(self, engines: List[Engine],
                  params: GLBParams = GLBParams(),
-                 migrate: bool = False):
+                 migrate: bool = False, tracer=None):
         self.engines = engines
         self.params = params
         self.migrate = migrate
+        # Fabric-level trace track: supersteps, the load vector, steal
+        # and termination instants live on their own pid, one past the
+        # highest replica id (replica tracks keep their own pids).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._fabric_pid = 1 + max(
+            (e.replica_id for e in engines), default=-1
+        )
+        if self.tracer.enabled:
+            self.tracer.process_name(self._fabric_pid, "fabric balancer")
+            self.tracer.thread_name(self._fabric_pid, 0, "balance")
         P = len(engines)
         z = params.resolve_z(P)
         self._buddies = jnp.asarray(lifeline_buddies(P, z))
@@ -906,14 +1114,31 @@ class GLBReplicaBalancer:
             self.migrations += 1
             self.migration_modes[mode] += 1
             self.moves += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "steal_live", pid=self._fabric_pid,
+                    args={"victim": victim.replica_id,
+                          "thief": thief.replica_id, "mode": mode},
+                )
 
     def balance(self) -> bool:
         """One balancing pass. Returns True when the fabric is done —
         the load vector gathered for the steal matching doubles as the
         GLB termination detector, so callers need no separate poll."""
         loads = np.asarray([e.load for e in self.engines], np.int32)
+        if self.tracer.enabled:
+            # The GLB size vector as a counter track — the measurement a
+            # cost-modeled balancer will regress on.
+            self.tracer.counter(
+                "fabric_load",
+                {f"replica{i}": int(v) for i, v in enumerate(loads)},
+                pid=self._fabric_pid,
+            )
         if terminated(loads):
             self.terminated = True
+            if self.tracer.enabled:
+                self.tracer.instant("terminated", pid=self._fabric_pid,
+                                    args={"superstep": self.supersteps})
             return True
         sizes = np.asarray([self._stealable(e) for e in self.engines],
                            np.int32)
@@ -934,11 +1159,19 @@ class GLBReplicaBalancer:
             if v.queue:
                 # Tier 1: steal queued (unstarted) requests first.
                 take = max(1, len(v.queue) // 2)
-                for _ in range(min(take, len(v.queue))):
+                took = min(take, len(v.queue))
+                for _ in range(took):
                     # Oldest-first: stolen requests keep their arrival
                     # order on the thief, not the victim's inverted tail.
                     self.engines[thief].submit(v.queue.popleft())
                     self.moves += 1
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "steal_queued", pid=self._fabric_pid,
+                        args={"victim": v.replica_id,
+                              "thief": self.engines[thief].replica_id,
+                              "n": took},
+                    )
             elif self.migrate and v.paged and self.engines[thief].paged:
                 self._steal_live(self.engines[thief], v)
         self._step += 1
@@ -946,13 +1179,18 @@ class GLBReplicaBalancer:
 
     def run(self, max_steps: int = 10_000):
         """Drive the fabric to completion: balance, superstep every
-        engine, repeat until the balance pass reports termination."""
+        engine, repeat until the balance pass reports termination. Each
+        iteration is a ``superstep`` span on the fabric track (a no-op
+        context manager when tracing is off — per superstep, not per
+        token)."""
         while max_steps > 0:
-            if self.balance():
-                break
-            for e in self.engines:
-                e.step()
-            self.supersteps += 1
+            with self.tracer.span("superstep", pid=self._fabric_pid,
+                                  args={"n": self.supersteps}):
+                if self.balance():
+                    break
+                for e in self.engines:
+                    e.step()
+                self.supersteps += 1
             max_steps -= 1
 
     # ------------------------------------------------------ result collection
@@ -969,11 +1207,22 @@ class GLBReplicaBalancer:
         }
         return merged
 
+    def merged_metrics(self) -> MetricsRegistry:
+        """Fabric-level metrics registry: counters add, gauges keep the
+        high-water mark, histograms merge bucket counts — so quantiles
+        are of the MERGED latency distribution, not averages of
+        per-replica quantiles. Feed to ``render_prometheus()`` for a
+        fabric scrape."""
+        for e in self.engines:
+            e.stats()               # sync attr-backed gauges first
+        return MetricsRegistry.merged([e.metrics for e in self.engines])
+
     def report(self) -> str:
-        """Human-readable fabric summary (``core.stats.fabric_summary``)
-        plus the balancer counters."""
-        lines = [fabric_summary([e.stats() for e in self.engines],
-                                title="replica fabric")]
+        """Human-readable fabric summary (``core.stats.fabric_summary``
+        over the merged registry view ``collect()`` produces) plus the
+        balancer counters."""
+        lines = [fabric_summary(self.collect(), title="replica fabric",
+                                places=len(self.engines))]
         lines.append(
             f"  balancer: {self.moves} moves ({self.migrations} live "
             f"migrations: {self.migration_modes['live']} live / "

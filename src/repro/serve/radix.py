@@ -38,6 +38,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import NULL_TRACER
+
 from .kvpool import KVPool
 
 
@@ -71,9 +73,12 @@ class _Node:
 
 
 class RadixPrefixCache:
-    def __init__(self, pool: KVPool):
+    def __init__(self, pool: KVPool, tracer=None, pid: int = 0):
         self.pool = pool
         self.bs = pool.block_size
+        # Observability: hit/evict instants on the owning replica's track.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.pid = pid
         self.root = _Node([], [], None)
         self._clock = 0                # logical LRU clock (deterministic)
         self.hits = 0
@@ -156,6 +161,10 @@ class RadixPrefixCache:
             nd.last_use = now
         self.hits += 1
         self.tokens_reused += p
+        if self.tracer.enabled:
+            self.tracer.instant("cache_hit", pid=self.pid,
+                                args={"sid": sid, "matched": p,
+                                      "blocks": len(blocks)})
         return p
 
     # ------------------------------------------------------------- insert
@@ -281,6 +290,11 @@ class RadixPrefixCache:
             del parent.children[victim.key(self.bs)]
             self.cached_tokens -= len(victim.tokens)
             self.evictions += 1
+            if self.tracer.enabled:
+                self.tracer.instant("cache_evict", pid=self.pid,
+                                    args={"tokens": len(victim.tokens),
+                                          "freed_so_far": freed,
+                                          "need": need})
             if self._evictable(parent):
                 cand.append(parent)
         return freed

@@ -59,6 +59,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_TRACER, MetricsRegistry, now_us
+
 from .kvpool import KVPool, PoolExhausted
 
 _INF = 1 << 30
@@ -99,8 +101,15 @@ class ContinuousBatchingScheduler:
                  max_seq: int, watermark_blocks: int = 0,
                  token_budget: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 cache=None, shed_policy: str = "youngest"):
+                 cache=None, shed_policy: str = "youngest",
+                 tracer=None, metrics=None, pid: int = 0):
         assert shed_policy in ("youngest", "budget"), shed_policy
+        # Observability: the engine hands down its tracer/registry so
+        # admission/preemption events land on the owning replica's track
+        # (pid) and queue-wait is observed where the commit happens.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.pid = pid
         self.pool = pool
         self.max_slots = max_slots
         self.lookahead = lookahead
@@ -192,6 +201,13 @@ class ContinuousBatchingScheduler:
         # for it this step — the engine must not prefill a freed seq.
         self._prefill.pop(victim, None)
         plan.prefill = [e for e in plan.prefill if e[0] != victim]
+        req.t_queued = now_us()
+        if self.tracer.enabled:
+            self.tracer.instant("preempt", pid=self.pid,
+                                args={"slot": victim, "rid": req.rid})
+            self.tracer.req_instant(req.rid, "preempted", pid=self.pid,
+                                    args={"slot": victim})
+            self.tracer.req_phase(req.rid, "queued", pid=self.pid)
         queue.appendleft(req)
         slots[victim] = None
         self._order[victim] = -1
@@ -367,6 +383,18 @@ class ContinuousBatchingScheduler:
             self._order[slot] = self._admit_seq
             self._admit_seq += 1
             self.admissions += 1
+            # Admission commit: the request leaves the queue here, for
+            # both the chunked and legacy paths — the one site where
+            # queue wait ends and the prefill phase begins.
+            t_adm = now_us()
+            if getattr(req, "t_queued", 0.0):
+                self.metrics.histogram("queue_wait_ms").observe(
+                    (t_adm - req.t_queued) / 1e3
+                )
+            if self.tracer.enabled:
+                self.tracer.req_phase(req.rid, "prefill", pid=self.pid,
+                                      args={"slot": slot,
+                                            "cached": matched})
             plan.granted[slot] = min(self.pool.capacity(req.rid),
                                      self.max_seq)
             if self.chunked_mode:
@@ -378,6 +406,16 @@ class ContinuousBatchingScheduler:
                 plan.active[slot] = True
                 plan.quota[slot] = min(self.lookahead, budget_left)
                 budget_left -= int(plan.quota[slot])
+        if self.tracer.enabled:
+            # The step's token-budget split: decode positions granted vs
+            # prefill-chunk tokens scheduled — the per-step timeline a
+            # cost-modeled balancer will read.
+            self.tracer.counter(
+                "token_budget",
+                {"decode": float(plan.quota.sum()),
+                 "prefill": float(sum(e[3] - e[2] for e in plan.prefill))},
+                pid=self.pid,
+            )
         return plan
 
     def release(self, rid: int) -> None:
