@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import init_lm
-from repro.obs import Tracer, quantiles_from_values, validate_chrome_trace
+from repro.obs import (FlightRecorder, Tracer, quantiles_from_values,
+                       validate_chrome_trace)
 from repro.serve.engine import Engine, GLBReplicaBalancer, Request
 
 STEPS_PER_SYNC = 16
@@ -64,6 +65,11 @@ SKEW_BLOCKS = 36        # fits 2 full seqs + lookahead comfortably, NOT 4:
 SKEW_CHUNK = 16         # chunked prefill makes a recompute resume COST
                         # supersteps — the work live migration avoids
 TRACE_PATH = "BENCH_serve_trace.json"   # Chrome trace artifact (CI upload)
+FLIGHT_CAPACITY = 32    # below the run's event count: the flight row
+                        # must exercise ring WRAPAROUND, not ample
+                        # capacity, and still dump a valid trace
+                        # (asserted — the steady-state workload emits
+                        # ~60 ring events)
 
 
 def _bench_cfg():
@@ -297,6 +303,29 @@ def run():
     )
     obs_overhead = 100.0 * (1.0 - tps_on / max(tps_new, 1e-9))
 
+    # Flight-recorder overhead: the same workload tracing into a ring
+    # bounded FAR below the run's event count (forced wraparound), i.e.
+    # always-on tracing at fixed memory. Deterministic invariants:
+    # syncs/token unchanged (HARD gate) and the wrapped ring still
+    # dumps a validator-clean trace (dump_valid, HARD gate).
+    flights = []
+
+    def _mk_flight():
+        fr = FlightRecorder(capacity=FLIGHT_CAPACITY)
+        flights.append(fr)
+        return Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ,
+                      pad_len=8, steps_per_sync=STEPS_PER_SYNC,
+                      tracer=fr)
+
+    tps_fl, spt_fl = _best_of(_mk_flight, lambda e: _drive(e, e.step))
+    flight = flights[-1]
+    flight_valid = int(validate_chrome_trace(flight.dump()) == [])
+    assert len(flight.events) <= FLIGHT_CAPACITY
+    assert flight.dropped > 0, (
+        "flight bench must wrap the ring; raise the workload or shrink "
+        f"FLIGHT_CAPACITY (events={len(flight.events)})"
+    )
+
     # Paged pool, same workload and same KV rows as the contiguous engine:
     # tokens/s should track the contiguous fast path (the pool adds a
     # block-table walk, not extra attention work).
@@ -386,6 +415,14 @@ def run():
          f"overhead_pct={obs_overhead:.1f};"
          f"syncs_per_tok_on={spt_on:.3f};"
          f"syncs_per_tok_off={spt_new:.3f}"),
+        ("serve_flight_overhead", 1e6 / max(tps_fl, 1e-9),
+         f"tok_s={tps_fl:.1f};"
+         f"vs_untraced={tps_fl / max(tps_new, 1e-9):.2f}x;"
+         f"syncs_per_tok={spt_fl:.3f};"
+         f"ring_capacity={FLIGHT_CAPACITY};"
+         f"ring_events={len(flight.events)};"
+         f"dropped_events={flight.dropped};"
+         f"dump_valid={flight_valid}"),
         ("serve_paged_loop", 1e6 / max(tps_pg, 1e-9),
          f"tok_s={tps_pg:.1f};syncs_per_tok={spt_pg:.3f};"
          f"vs_contiguous={tps_pg / max(tps_new, 1e-9):.2f}x;"

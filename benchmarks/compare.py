@@ -77,6 +77,13 @@ GATES = [
     # appends. Deterministic, so it gates hard like the off-arm's.
     Gate("serve", "serve_obs_overhead", "syncs_per_tok_on", "lower", 0.01,
          note="a live tracer adds ZERO device drains"),
+    # The bounded flight ring keeps both deterministic contracts: no
+    # extra host syncs, and a WRAPPED ring still dumps a balanced,
+    # validator-clean trace (dump_valid is 0/1).
+    Gate("serve", "serve_flight_overhead", "syncs_per_tok", "lower", 0.01,
+         note="a live flight recorder adds ZERO device drains"),
+    Gate("serve", "serve_flight_overhead", "dump_valid", "higher", 0.0,
+         note="wrapped ring must dump a validator-clean trace"),
     # --- serve: wall-clock, loose + advisory --------------------------
     Gate("serve", "serve_fori_loop", "tok_s", "higher", 0.60,
          note="decode throughput cliff detector", hard=False),
@@ -90,6 +97,9 @@ GATES = [
          hard=False),
     Gate("serve", "serve_obs_overhead", "tok_s_off", "higher", 0.60,
          note="tracer-off throughput must track serve_fori_loop",
+         hard=False),
+    Gate("serve", "serve_flight_overhead", "tok_s", "higher", 0.60,
+         note="ring-buffer tracing throughput cliff detector",
          hard=False),
     # --- kernels: oracle agreement is deterministic -------------------
     Gate("kernels", "attn_chunked_1k", "err", "lower", 0.0, abs_tol=1e-5,

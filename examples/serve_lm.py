@@ -27,9 +27,15 @@ and prints the fabric-level merged stats report.
 ``--trace PATH`` records the whole run — request lifecycle spans across
 replicas, engine steps, prefill chunks, steal/migration events — as
 Chrome trace_event JSON: open the file at https://ui.perfetto.dev.
-``--metrics`` prints the merged fabric metrics registry (TTFT / TPOT /
-queue-wait percentiles and all counters) in Prometheus text format at
-exit. See DESIGN.md §10 and README "Tracing a serving run".
+``--flight N`` records into a bounded ring of N events instead (the
+black-box default for always-on tracing; the dump is balanced even
+after wraparound). ``--slo ttft_ms=250,tpot_ms=50`` declares latency
+targets — the exit report then states attainment and any burn-rate
+alerts. ``--metrics`` prints the merged fabric metrics registry (TTFT /
+TPOT / queue-wait percentiles and all counters) in Prometheus text
+format at exit. Traced runs finish with the analyzer's fabric report:
+request time attribution, per-replica utilization, steal efficiency
+(DESIGN.md §14). See also README "Analyzing a trace".
 """
 import argparse
 import time
@@ -38,7 +44,9 @@ import jax
 
 from repro.configs import ARCHS
 from repro.models import init_lm
-from repro.obs import Tracer, validate_chrome_trace
+from repro.obs import (FlightRecorder, SLOMonitor, Tracer, analyze_trace,
+                       parse_slo_spec, render_summary,
+                       validate_chrome_trace)
 from repro.serve.engine import Engine, GLBReplicaBalancer, Request
 
 SYSTEM_PROMPT = [7, 3, 9, 2, 5, 8, 6, 4, 1, 2, 3, 4, 9, 9, 8, 7]
@@ -61,6 +69,15 @@ def main():
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write a Perfetto-loadable Chrome trace JSON "
                          "of the run to PATH")
+    ap.add_argument("--flight", metavar="N", type=int, default=None,
+                    help="trace into a bounded ring of N events "
+                         "(FlightRecorder) instead of an unbounded "
+                         "tracer; implies tracing even without --trace")
+    ap.add_argument("--slo", metavar="SPEC", default=None,
+                    help="declare SLO targets, e.g. "
+                         "'ttft_ms=250,tpot_ms=50' (optionally "
+                         "'ttft_ms=250@0.999'); the exit report states "
+                         "attainment and burn-rate alerts")
     ap.add_argument("--metrics", action="store_true",
                     help="print the merged fabric metrics registry "
                          "(Prometheus text format) at exit")
@@ -77,10 +94,18 @@ def main():
         ap.error("--prefix-cache / --prefill-chunk / --migrate "
                  "require --paged")
     # ONE tracer for the whole fabric: request spans cross replicas.
-    tracer = Tracer() if args.trace else None
+    # --flight bounds it to a ring; a plain --trace keeps everything.
+    if args.flight is not None:
+        tracer = FlightRecorder(capacity=args.flight)
+    elif args.trace:
+        tracer = Tracer()
+    else:
+        tracer = None
+    slo = SLOMonitor(parse_slo_spec(args.slo)) if args.slo else None
     engines = [Engine(cfg, params, tracer=tracer, replica_id=i, **kw)
                for i in range(args.replicas)]
-    bal = GLBReplicaBalancer(engines, migrate=args.migrate, tracer=tracer)
+    bal = GLBReplicaBalancer(engines, migrate=args.migrate, tracer=tracer,
+                             slo=slo)
 
     # Heterogeneous lengths: the first few requests run long, so replicas
     # that drew short ones go hungry while a peer is still wedged on
@@ -137,12 +162,22 @@ def main():
     print(bal.report())
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.prompt} -> {r.out}")
-    if args.trace:
-        tracer.write(args.trace)
-        problems = validate_chrome_trace(tracer.to_chrome())
-        assert not problems, problems
-        print(f"\nwrote {len(tracer.events)} trace events to "
-              f"{args.trace} — load it at https://ui.perfetto.dev")
+    if tracer is not None:
+        # Post-run analytics over the live tracer (dump() is balanced
+        # and non-destructive): the fabric report from our own trace.
+        analysis = analyze_trace(tracer)
+        print()
+        print(render_summary(analysis))
+        if args.trace:
+            tracer.write(args.trace)
+            problems = validate_chrome_trace(tracer.dump())
+            assert not problems, problems
+            extra = (f" (ring: {tracer.dropped} dropped)"
+                     if args.flight is not None else "")
+            print(f"\nwrote {len(tracer.events)} trace events{extra} to "
+                  f"{args.trace} — load it at https://ui.perfetto.dev, "
+                  f"or: PYTHONPATH=src python -m repro.obs.analyze "
+                  f"{args.trace}")
     if args.metrics:
         print("\n# merged fabric metrics registry")
         print(bal.merged_metrics().render_prometheus(), end="")

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import GLB, GLBParams
 from repro.obs import Tracer, validate_chrome_trace
+from repro.obs.analyze import analyze_trace, headline
 from repro.problems.uts import uts_oracle, uts_problem
 
 
@@ -53,6 +54,7 @@ def main():
         tracer.write(args.trace)
         problems = validate_chrome_trace(tracer.to_chrome())
         assert not problems, problems
+        print(headline(analyze_trace(tracer)))
         print(f"wrote {len(tracer.events)} trace events to {args.trace} "
               f"— load it at https://ui.perfetto.dev")
 

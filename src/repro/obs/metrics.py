@@ -73,10 +73,16 @@ class Histogram:
     __slots__ = ("bounds", "counts", "count", "total", "vmin", "vmax")
 
     def __init__(self, bounds: Sequence[float] = DEFAULT_MS_BUCKETS):
+        # User input is validated with real exceptions, not asserts —
+        # asserts vanish under ``python -O`` and a silently-accepted bad
+        # bucket layout corrupts every merge downstream.
         bounds = tuple(float(b) for b in bounds)
-        assert all(a < b for a, b in zip(bounds, bounds[1:])), \
-            "histogram bounds must be strictly ascending"
-        assert bounds, "histogram needs at least one bucket bound"
+        if not bounds:
+            raise ValueError("histogram needs at least one bucket bound")
+        if not all(a < b for a, b in zip(bounds, bounds[1:])):
+            raise ValueError(
+                f"histogram bounds must be strictly ascending: {bounds}"
+            )
         self.bounds = bounds
         self.counts = [0] * (len(bounds) + 1)
         self.count = 0
@@ -116,7 +122,11 @@ class Histogram:
         return self.vmax
 
     def merge_from(self, other: "Histogram") -> None:
-        assert self.bounds == other.bounds, "bucket layouts differ"
+        if self.bounds != other.bounds:
+            raise ValueError(
+                "cannot merge histograms with different bucket layouts: "
+                f"{self.bounds} vs {other.bounds}"
+            )
         for i, c in enumerate(other.counts):
             self.counts[i] += c
         self.count += other.count

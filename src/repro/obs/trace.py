@@ -38,6 +38,8 @@ can be correlated on one axis.
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 import time
 from contextlib import contextmanager
 from typing import Any, Dict, List, Optional
@@ -46,6 +48,27 @@ from typing import Any, Dict, List, Optional
 def now_us() -> float:
     """Monotonic microseconds — the Chrome trace_event clock."""
     return time.perf_counter_ns() / 1e3
+
+
+def atomic_write_json(path: str, obj: Any) -> None:
+    """Write ``obj`` as JSON via a temp file in the same directory plus
+    ``os.replace`` — an interrupted run leaves either the previous
+    complete file or the new complete file, never a truncated one
+    (``BENCH_serve_trace.json`` is parsed by the CI analyze gate, so a
+    half-written artifact would fail the wrong step). Used by
+    ``Tracer.write`` and ``FlightRecorder.dump``."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".trace.", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def clock_sync() -> Dict[str, float]:
@@ -99,6 +122,10 @@ class NullTracer:
 
     def flush(self):                            # pragma: no cover - no-op
         pass
+
+    def dump(self):                             # pragma: no cover - no-op
+        return {"traceEvents": [], "displayTimeUnit": "ms",
+                "otherData": {}}
 
     def write(self, path):                      # pragma: no cover - no-op
         pass
@@ -262,10 +289,35 @@ class Tracer:
             "otherData": {"clock_sync": self.sync},
         }
 
+    def dump(self) -> dict:
+        """Balanced trace dict WITHOUT mutating tracer state: still-open
+        duration spans and request phases are closed in the exported
+        copy only, so a live tracer can be analyzed mid-run
+        (``obs.analyze.analyze_trace`` calls this) and keep tracing."""
+        events = list(self.events)
+        ts = now_us()
+        for (pid, tid), stack in self._stacks.items():
+            for _ in stack:
+                events.append({"ph": "E", "ts": ts, "pid": pid,
+                               "tid": tid})
+        for rid, (phase, pid) in self._req_phase.items():
+            if phase is not None:
+                events.append({"name": phase, "cat": "request",
+                               "ph": "e", "ts": ts, "pid": pid,
+                               "tid": 0, "id": f"req{rid}"})
+            events.append({"name": "request", "cat": "request",
+                           "ph": "e", "ts": ts, "pid": pid, "tid": 0,
+                           "id": f"req{rid}",
+                           "args": {"flushed": True}})
+        return {
+            "traceEvents": events,
+            "displayTimeUnit": "ms",
+            "otherData": {"clock_sync": self.sync},
+        }
+
     def write(self, path: str) -> None:
         self.flush()
-        with open(path, "w") as f:
-            json.dump(self.to_chrome(), f)
+        atomic_write_json(path, self.to_chrome())
 
 
 def validate_chrome_trace(trace: dict) -> List[str]:

@@ -285,7 +285,8 @@ class Engine:
                  prefix_cache: bool = False,
                  prefill_chunk: Optional[int] = None,
                  shed_policy: str = "youngest",
-                 tracer=None, metrics=None, replica_id: int = 0):
+                 tracer=None, metrics=None, slo=None,
+                 replica_id: int = 0):
         self.cfg = cfg
         self.params = params
         # Observability (DESIGN.md §10): tracer defaults to the no-op
@@ -297,6 +298,10 @@ class Engine:
         # its own registry, merged at result collection.
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # Optional SLOMonitor (obs.slo): fed the same per-request
+        # latencies the histograms get; one monitor is shared fabric-wide
+        # the way the tracer is.
+        self.slo = slo
         self.replica_id = replica_id
         if self.tracer.enabled:
             self.tracer.process_name(replica_id, f"replica {replica_id}")
@@ -352,7 +357,8 @@ class Engine:
                 max_seq=max_seq, watermark_blocks=watermark_blocks,
                 token_budget=token_budget, prefill_chunk=prefill_chunk,
                 cache=self.prefix_cache, shed_policy=shed_policy,
-                tracer=self.tracer, metrics=self.metrics, pid=replica_id,
+                tracer=self.tracer, metrics=self.metrics, slo=self.slo,
+                pid=replica_id,
             )
             self.cache = make_paged_cache(
                 cfg, self.num_blocks, bs, max_slots, dtype=jnp.float32
@@ -430,9 +436,12 @@ class Engine:
                 req = self.queue.popleft()
                 t_adm = now_us()
                 if req.t_queued:
+                    wait_ms = (t_adm - req.t_queued) / 1e3
                     self.metrics.histogram("queue_wait_ms").observe(
-                        (t_adm - req.t_queued) / 1e3
+                        wait_ms
                     )
+                    if self.slo is not None:
+                        self.slo.observe("queue_wait_ms", wait_ms)
                 if self.tracer.enabled:
                     self.tracer.req_phase(req.rid, "prefill",
                                           pid=self.replica_id,
@@ -460,9 +469,10 @@ class Engine:
                     (req.t_first - t_adm) / 1e3
                 )
                 if req.t_submit:
-                    self.metrics.histogram("ttft_ms").observe(
-                        (req.t_first - req.t_submit) / 1e3
-                    )
+                    ttft_ms = (req.t_first - req.t_submit) / 1e3
+                    self.metrics.histogram("ttft_ms").observe(ttft_ms)
+                    if self.slo is not None:
+                        self.slo.observe("ttft_ms", ttft_ms)
                 if self.tracer.enabled:
                     self.tracer.end(pid=self.replica_id)
                     self.tracer.req_phase(req.rid, "decode",
@@ -478,9 +488,11 @@ class Engine:
             if req.t_first:
                 # Steady-state decode pace: TTFT is excluded, and the
                 # first token itself emits no inter-token gap.
-                self.metrics.histogram("tpot_ms").observe(
-                    (t_fin - req.t_first) / 1e3 / max(len(req.out) - 1, 1)
-                )
+                tpot_ms = ((t_fin - req.t_first) / 1e3
+                           / max(len(req.out) - 1, 1))
+                self.metrics.histogram("tpot_ms").observe(tpot_ms)
+                if self.slo is not None:
+                    self.slo.observe("tpot_ms", tpot_ms)
             if self.tracer.enabled:
                 self.tracer.req_end(req.rid, pid=self.replica_id,
                                     args={"tokens": len(req.out)})
@@ -557,9 +569,10 @@ class Engine:
             self.tokens_out += 1
             req.t_first = now_us()
             if req.t_submit:
-                self.metrics.histogram("ttft_ms").observe(
-                    (req.t_first - req.t_submit) / 1e3
-                )
+                ttft_ms = (req.t_first - req.t_submit) / 1e3
+                self.metrics.histogram("ttft_ms").observe(ttft_ms)
+                if self.slo is not None:
+                    self.slo.observe("ttft_ms", ttft_ms)
             if self.tracer.enabled:
                 self.tracer.req_phase(req.rid, "decode",
                                       pid=self.replica_id)
@@ -1046,7 +1059,7 @@ class GLBReplicaBalancer:
 
     def __init__(self, engines: List[Engine],
                  params: GLBParams = GLBParams(),
-                 migrate: bool = False, tracer=None):
+                 migrate: bool = False, tracer=None, slo=None):
         self.engines = engines
         self.params = params
         self.migrate = migrate
@@ -1060,6 +1073,17 @@ class GLBReplicaBalancer:
         if self.tracer.enabled:
             self.tracer.process_name(self._fabric_pid, "fabric balancer")
             self.tracer.thread_name(self._fabric_pid, 0, "balance")
+        # SLO monitor (obs.slo): attach it to every engine that doesn't
+        # have its own, bind the fabric tracer/pid for burn-rate
+        # instants, and check() it once per balance pass.
+        self.slo = slo
+        if slo is not None:
+            slo.bind(tracer=self.tracer, pid=self._fabric_pid)
+            for e in engines:
+                if e.slo is None:
+                    e.slo = slo
+                    if e.paged:
+                        e.sched.slo = slo
         P = len(engines)
         z = params.resolve_z(P)
         self._buddies = jnp.asarray(lifeline_buddies(P, z))
@@ -1126,6 +1150,8 @@ class GLBReplicaBalancer:
         the load vector gathered for the steal matching doubles as the
         GLB termination detector, so callers need no separate poll."""
         loads = np.asarray([e.load for e in self.engines], np.int32)
+        if self.slo is not None:
+            self.slo.check()
         if self.tracer.enabled:
             # The GLB size vector as a counter track — the measurement a
             # cost-modeled balancer will regress on.
@@ -1205,6 +1231,8 @@ class GLBReplicaBalancer:
             "supersteps": self.supersteps,
             **{f"mig_{k}": v for k, v in self.migration_modes.items()},
         }
+        if self.slo is not None:
+            merged["_slo"] = self.slo.snapshot()
         return merged
 
     def merged_metrics(self) -> MetricsRegistry:
@@ -1230,4 +1258,6 @@ class GLBReplicaBalancer:
             f"{self.migration_modes['recompute']} recompute), "
             f"{self.supersteps} supersteps, terminated={self.terminated}"
         )
+        if self.slo is not None:
+            lines += [f"  {ln}" for ln in self.slo.report_lines()]
         return "\n".join(lines)

@@ -102,13 +102,14 @@ class ContinuousBatchingScheduler:
                  token_budget: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  cache=None, shed_policy: str = "youngest",
-                 tracer=None, metrics=None, pid: int = 0):
+                 tracer=None, metrics=None, slo=None, pid: int = 0):
         assert shed_policy in ("youngest", "budget"), shed_policy
         # Observability: the engine hands down its tracer/registry so
         # admission/preemption events land on the owning replica's track
         # (pid) and queue-wait is observed where the commit happens.
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.slo = slo
         self.pid = pid
         self.pool = pool
         self.max_slots = max_slots
@@ -388,9 +389,10 @@ class ContinuousBatchingScheduler:
             # queue wait ends and the prefill phase begins.
             t_adm = now_us()
             if getattr(req, "t_queued", 0.0):
-                self.metrics.histogram("queue_wait_ms").observe(
-                    (t_adm - req.t_queued) / 1e3
-                )
+                wait_ms = (t_adm - req.t_queued) / 1e3
+                self.metrics.histogram("queue_wait_ms").observe(wait_ms)
+                if self.slo is not None:
+                    self.slo.observe("queue_wait_ms", wait_ms)
             if self.tracer.enabled:
                 self.tracer.req_phase(req.rid, "prefill", pid=self.pid,
                                       args={"slot": slot,

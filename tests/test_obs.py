@@ -80,6 +80,31 @@ def test_histogram_merge_is_exact():
     assert ha.quantile(0.5) == hall.quantile(0.5)
 
 
+def test_histogram_bounds_validation_raises():
+    """User-input validation must be real exceptions, not asserts —
+    asserts vanish under `python -O` and a silently-accepted bad bucket
+    layout corrupts every merge downstream."""
+    with pytest.raises(ValueError):
+        Histogram(())
+    with pytest.raises(ValueError):
+        Histogram((1.0, 1.0, 2.0))          # not strictly ascending
+    with pytest.raises(ValueError):
+        Histogram((5.0, 1.0))
+
+
+def test_histogram_merge_mismatched_bounds_raises():
+    """Regression: merging histograms with different bucket layouts is a
+    ValueError (the counts would be meaningless bucket-for-bucket)."""
+    a = Histogram((1.0, 2.0, 4.0))
+    b = Histogram((1.0, 2.0, 8.0))
+    a.observe(1.5)
+    b.observe(3.0)
+    with pytest.raises(ValueError, match="different bucket layouts"):
+        a.merge_from(b)
+    # the failed merge must not have corrupted the target
+    assert a.count == 1 and a.counts == [0, 1, 0, 0]
+
+
 def test_quantiles_from_values_matches_histogram():
     vals = [1.0, 2.0, 4.0, 8.0, 100.0]
     h = Histogram()
@@ -134,6 +159,48 @@ def test_chrome_trace_schema_and_flush_balance():
                       and e.get("name") == "queued")
     assert queued_end["pid"] == 1
     json.dumps(trace)                     # serializable as-is
+
+
+def test_tracer_write_is_atomic(tmp_path):
+    """write() lands via temp-file + os.replace: the previous complete
+    file survives any interruption, no temp litter remains, and the
+    written JSON round-trips through the validator."""
+    path = tmp_path / "trace.json"
+    path.write_text('{"traceEvents": "PREVIOUS COMPLETE FILE"}')
+    tr = Tracer()
+    tr.begin("outer", pid=0)
+    tr.req_begin(1, pid=0)
+    tr.req_phase(1, "queued", pid=0)
+    tr.write(str(path))
+    loaded = json.loads(path.read_text())
+    assert validate_chrome_trace(loaded) == []
+    assert not list(tmp_path.glob(".trace.*")), "temp file left behind"
+    # a failing serialization must not clobber the existing file
+    tr2 = Tracer()
+    tr2.events.append({"ph": "i", "name": "bad", "ts": 1, "pid": 0,
+                       "tid": 0, "args": {"x": object()}})
+    with pytest.raises(TypeError):
+        tr2.write(str(path))
+    assert json.loads(path.read_text()) == loaded
+    assert not list(tmp_path.glob(".trace.*"))
+
+
+def test_tracer_dump_is_non_destructive():
+    """dump() exports a balanced copy of a LIVE tracer: open spans and
+    phases are closed in the export only, and tracing continues."""
+    tr = Tracer()
+    tr.begin("outer", pid=0)
+    tr.req_begin(3, pid=0)
+    tr.req_phase(3, "decode", pid=0)
+    n_before = len(tr.events)
+    dump = tr.dump()
+    assert validate_chrome_trace(dump) == []
+    assert len(tr.events) == n_before           # tracer untouched
+    assert tr._stacks[(0, 0)] == ["outer"]      # still open
+    tr.end(pid=0)                               # still usable
+    tr.req_end(3, pid=0)
+    tr.flush()
+    assert validate_chrome_trace(tr.to_chrome()) == []
 
 
 def test_validator_catches_malformed_traces():
