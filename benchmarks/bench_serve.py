@@ -65,6 +65,14 @@ SKEW_BLOCKS = 36        # fits 2 full seqs + lookahead comfortably, NOT 4:
 SKEW_CHUNK = 16         # chunked prefill makes a recompute resume COST
                         # supersteps — the work live migration avoids
 TRACE_PATH = "BENCH_serve_trace.json"   # Chrome trace artifact (CI upload)
+# crash-recovery chaos arm (DESIGN.md §15): a 3-replica fabric loses one
+# replica mid-flight; the deterministic acceptance metrics are zero lost
+# requests, greedy-token-identical outputs vs an identical clean fabric,
+# and termination (no wedge)
+CHAOS_REPLICAS = 3
+CHAOS_REQS = 6
+CHAOS_MAX_NEW = 24
+CHAOS_CRASH_AT = 1
 FLIGHT_CAPACITY = 32    # below the run's event count: the flight row
                         # must exercise ring WRAPAROUND, not ample
                         # capacity, and still dump a valid trace
@@ -272,6 +280,31 @@ def _skew_arm(cfg, params, migrate, tracer=None):
     return _drive_skew(engines, migrate, rid0=0, tracer=tracer)
 
 
+def _chaos_arm(cfg, params, faults=None):
+    """One fabric run for the crash-recovery row: CHAOS_REQS requests
+    round-robined over CHAOS_REPLICAS paged replicas; with ``faults``,
+    replica 0 crashes at superstep CHAOS_CRASH_AT while its work is
+    still in flight. Scheduling and recovery are deterministic (greedy
+    decode, heartbeat window on the superstep clock), so everything but
+    wall-clock gates hard."""
+    engines = [
+        Engine(cfg, params, max_slots=2, max_seq=MAX_SEQ, pad_len=8,
+               steps_per_sync=STEPS_PER_SYNC, paged=True,
+               block_size=PAGED_BS, num_blocks=32, replica_id=i)
+        for i in range(CHAOS_REPLICAS)
+    ]
+    bal = GLBReplicaBalancer(engines, migrate=True, faults=faults)
+    reqs = [Request(rid=r, prompt=[3, r + 1, 4], max_new=CHAOS_MAX_NEW)
+            for r in range(CHAOS_REQS)]
+    for r in reqs:
+        bal.submit(r)
+    t0 = time.time()
+    status = bal.run(max_steps=2000)
+    dt = time.time() - t0
+    lost = sum(1 for r in reqs if not r.done)
+    return dt, status, bal, lost, [list(r.out) for r in reqs]
+
+
 def run():
     cfg = _bench_cfg()
     params = init_lm(jax.random.key(0), cfg)
@@ -399,6 +432,22 @@ def run():
     problems = validate_chrome_trace(tracer.to_chrome())
     assert not problems, problems
 
+    # Crash recovery: identical fabric clean vs one replica crashed
+    # mid-flight. The crashed arm must terminate with zero lost
+    # requests and greedy-token-identical outputs (HARD gates); the
+    # superstep makespan quantifies the recovery detour.
+    from repro.serve.faults import FaultInjector
+    _chaos_arm(cfg, params)                       # warm/compile
+    dt_cl, st_cl, bal_cl, lost_cl, outs_cl = _chaos_arm(cfg, params)
+    assert st_cl == "terminated" and lost_cl == 0
+    dt_cr, st_cr, bal_cr, lost_cr, outs_cr = _chaos_arm(
+        cfg, params,
+        faults=FaultInjector().crash(0, at=CHAOS_CRASH_AT),
+    )
+    assert st_cr == "terminated", "crashed fabric wedged"
+    readmitted = bal_cr.readmitted_queued + bal_cr.readmitted_running
+    greedy_identical = int(outs_cr == outs_cl)
+
     # syncs per decoded *position* is the architectural constant: the
     # legacy loop drains every position (1.0), the fori_loop engine drains
     # once per steps_per_sync positions.
@@ -463,6 +512,17 @@ def run():
          f"steps_vs_queue_steal={steps_m / max(steps_q, 1):.2f}x;"
          f"wall_vs_queue_steal={dt_m / max(dt_q, 1e-9):.2f}x;"
          f"trace_events={len(tracer.events)};trace={TRACE_PATH}"),
+        ("serve_crash_recovery", 1e6 * dt_cr,
+         f"makespan_s={dt_cr:.2f};makespan_steps={bal_cr.supersteps};"
+         f"clean_steps={bal_cl.supersteps};"
+         f"requests_lost={lost_cr};readmitted={readmitted};"
+         f"replicas_dead={bal_cr.replicas_dead};"
+         f"terminated={int(st_cr == 'terminated')};"
+         f"greedy_identical={greedy_identical};"
+         f"steps_vs_clean="
+         f"{bal_cr.supersteps / max(bal_cl.supersteps, 1):.2f}x;"
+         f"wall_vs_clean={dt_cr / max(dt_cl, 1e-9):.2f}x;"
+         f"crash_at={CHAOS_CRASH_AT};replicas={CHAOS_REPLICAS}"),
     ]
 
 

@@ -84,6 +84,18 @@ GATES = [
          note="a live flight recorder adds ZERO device drains"),
     Gate("serve", "serve_flight_overhead", "dump_valid", "higher", 0.0,
          note="wrapped ring must dump a validator-clean trace"),
+    # Crash recovery (DESIGN.md §15): deterministic fabric — greedy
+    # decode + heartbeat window on the superstep clock — so the loss
+    # and identity contracts gate hard at exactly their ideal values.
+    Gate("serve", "serve_crash_recovery", "requests_lost", "lower", 0.0,
+         note="a crashed replica's requests are re-admitted, never lost"),
+    Gate("serve", "serve_crash_recovery", "terminated", "higher", 0.0,
+         note="the crashed fabric must still terminate (0/1)"),
+    Gate("serve", "serve_crash_recovery", "greedy_identical", "higher",
+         0.0, note="re-admitted outputs token-identical to a clean run"),
+    Gate("serve", "serve_crash_recovery", "readmitted", "higher", 0.0,
+         note="the crash must actually cost recovery work (else the "
+              "scenario no longer exercises the ledger)"),
     # --- serve: wall-clock, loose + advisory --------------------------
     Gate("serve", "serve_fori_loop", "tok_s", "higher", 0.60,
          note="decode throughput cliff detector", hard=False),

@@ -9,6 +9,9 @@ replica 0; the balancer's lifeline matching redistributes them.
                                                           # chunked prefill
     PYTHONPATH=src python examples/serve_lm.py --paged --replicas 3 \
         --migrate                                         # live KV migration
+    PYTHONPATH=src python examples/serve_lm.py --paged --replicas 3 \
+        --chaos                                           # crash a replica,
+                                                          # recover losslessly
 
 With ``--paged`` each replica runs the block-granular KV pool + the
 continuous-batching scheduler (admission, watermark preemption) and the
@@ -81,6 +84,13 @@ def main():
     ap.add_argument("--metrics", action="store_true",
                     help="print the merged fabric metrics registry "
                          "(Prometheus text format) at exit")
+    ap.add_argument("--chaos", action="store_true",
+                    help="crash replica 0 at superstep 2 (DESIGN.md "
+                         "§15): the heartbeat detector fences it, "
+                         "lifelines re-wire, and its requests are "
+                         "re-admitted on the survivors with identical "
+                         "greedy tokens (requires --paged, >= 2 "
+                         "replicas)")
     args = ap.parse_args()
 
     cfg = ARCHS["tinyllama-1.1b"].smoke()
@@ -90,9 +100,12 @@ def main():
         kw.update(paged=True, block_size=8,
                   prefix_cache=args.prefix_cache,
                   prefill_chunk=args.prefill_chunk)
-    elif args.prefix_cache or args.prefill_chunk or args.migrate:
-        ap.error("--prefix-cache / --prefill-chunk / --migrate "
-                 "require --paged")
+    elif args.prefix_cache or args.prefill_chunk or args.migrate \
+            or args.chaos:
+        ap.error("--prefix-cache / --prefill-chunk / --migrate / "
+                 "--chaos require --paged")
+    if args.chaos and args.replicas < 2:
+        ap.error("--chaos needs at least 2 replicas to survive")
     # ONE tracer for the whole fabric: request spans cross replicas.
     # --flight bounds it to a ring; a plain --trace keeps everything.
     if args.flight is not None:
@@ -102,10 +115,14 @@ def main():
     else:
         tracer = None
     slo = SLOMonitor(parse_slo_spec(args.slo)) if args.slo else None
+    faults = None
+    if args.chaos:
+        from repro.serve.faults import FaultInjector
+        faults = FaultInjector().crash(0, at=2)
     engines = [Engine(cfg, params, tracer=tracer, replica_id=i, **kw)
                for i in range(args.replicas)]
     bal = GLBReplicaBalancer(engines, migrate=args.migrate, tracer=tracer,
-                             slo=slo)
+                             slo=slo, faults=faults)
 
     # Heterogeneous lengths: the first few requests run long, so replicas
     # that drew short ones go hungry while a peer is still wedged on
@@ -123,10 +140,17 @@ def main():
         engines[0].step()
 
     t0 = time.time()
-    bal.run(max_steps=500)
+    status = bal.run(max_steps=500)
     dt = time.time() - t0
+    assert status == "terminated", f"fabric {status}, not terminated"
     assert all(r.done for r in reqs)
     assert bal.terminated, "GLB termination must fire, not max_steps"
+    if args.chaos:
+        assert bal.replicas_dead == 1 and not bal.alive[0]
+        print(f"chaos: replica 0 crashed and was declared dead; "
+              f"{bal.readmitted_queued} queued + "
+              f"{bal.readmitted_running} running request(s) re-admitted "
+              f"on the survivors; zero requests lost")
     total = sum(e.tokens_out for e in engines)
     mode = "paged" if args.paged else "contiguous"
     if args.prefix_cache:
@@ -135,6 +159,8 @@ def main():
         mode += f"+chunk{args.prefill_chunk}"
     if args.migrate:
         mode += "+migrate"
+    if args.chaos:
+        mode += "+chaos"
     print(f"[{mode}] completed {len(reqs)} requests, {total} tokens "
           f"in {dt:.1f}s over {args.replicas} replicas")
     for i, e in enumerate(engines):

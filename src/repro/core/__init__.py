@@ -16,7 +16,7 @@ from .problem import GLBProblem
 from .scheduler import run_sim, GLBRun
 from .executor import run_shardmap, lower_shardmap, GLBDistRun
 from .lifeline import (lifeline_buddies, lifeline_mask, match_steals,
-                       terminated)
+                       rewire_lifelines, terminated)
 from .stats import fabric_summary, merge_place_stats
 
 __all__ = [
@@ -31,6 +31,7 @@ __all__ = [
     "lifeline_buddies",
     "lifeline_mask",
     "match_steals",
+    "rewire_lifelines",
     "terminated",
     "merge_place_stats",
     "fabric_summary",

@@ -55,14 +55,20 @@ class GLB:
         self.routing = routing
         self.last_run = None
 
-    def run(self, seed: int = 0, tracer: Any = None) -> Any:
+    def run(self, seed: int = 0, tracer: Any = None,
+            faults: Any = None) -> Any:
         """Drive the problem to completion. ``tracer`` (sim mode only):
         a ``repro.obs.Tracer`` records per-superstep spans and the load
         vector — see ``run_sim``; the untraced path is unchanged (fully
-        jitted ``lax.while_loop``)."""
+        jitted ``lax.while_loop``). ``faults`` (sim mode only): a
+        ``repro.serve.faults.FaultInjector`` — places crash/hang/slow
+        mid-run and the failure protocol (heartbeats, lifeline
+        re-wiring, bag recovery) keeps the answer exact."""
         if self.mode == "sim":
             out = run_sim(self.problem, self.P, self.params, seed=seed,
-                          tracer=tracer)
+                          tracer=tracer, faults=faults)
+        elif faults is not None:
+            raise ValueError("fault injection is supported in mode='sim' only")
         elif tracer is not None and getattr(tracer, "enabled", False):
             raise ValueError("tracing is supported in mode='sim' only")
         else:

@@ -66,6 +66,36 @@ def lifeline_mask(P: int, z: int) -> np.ndarray:
     return m
 
 
+def rewire_lifelines(alive, z: int) -> np.ndarray:
+    """Post-failure buddy table: the 2^i circulant rebuilt over the
+    SURVIVING place set (failure semantics, DESIGN.md §15).
+
+    The table keeps the static (P, z) shape so jitted matching code
+    never retraces on a death: dead rows point at themselves (inert —
+    a dead place is never hungry and never advertises work, so a
+    self-edge can neither match nor register a pending request), and
+    alive rows jump 2^i hops along the compacted survivor ring, i.e.
+    ``buddy_i(p) = survivors[(rank(p) + 2^i) % S]``. For S = P this is
+    exactly ``lifeline_buddies(P, z)``. When the 2^i wrap collapses to
+    a self-edge (2^i ≡ 0 mod S — z was sized for the original fabric),
+    the ring neighbour stands in so every surviving row keeps z live
+    outgoing lifelines and the survivor graph stays connected.
+    """
+    alive = np.asarray(alive, dtype=bool)
+    P = alive.shape[0]
+    survivors = np.flatnonzero(alive)
+    S = survivors.size
+    if S == 0:
+        raise ValueError("rewire_lifelines: no surviving places")
+    out = np.repeat(np.arange(P, dtype=np.int32)[:, None], z, axis=1)
+    if S > 1:
+        for r, p in enumerate(survivors):
+            for i in range(z):
+                b = survivors[(r + (1 << i)) % S]
+                out[p, i] = b if b != p else survivors[(r + 1) % S]
+    return out
+
+
 class MatchResult(NamedTuple):
     src: jax.Array           # (P,) i32 — victim each thief receives from, -1 none
     dst: jax.Array           # (P,) i32 — thief each victim sends to, -1 none
@@ -147,7 +177,13 @@ def match_steals(
 
     # ---- pending update: unmatched hungry thieves (re-)register their
     # lifelines; thieves that got work clear their outstanding requests.
-    ll_mask = jnp.asarray(lifeline_mask(P, z))  # static constant
+    # Derived from the `buddies` ARGUMENT (not the static P,z table):
+    # after a failure re-wire the pending edges must re-register toward
+    # the surviving buddy set, never toward a dead place. Self-edges
+    # (dead rows point at themselves) register nothing.
+    ll_mask = jnp.zeros((P, P), bool).at[
+        jnp.arange(P)[:, None], buddies
+    ].set(True) & ~jnp.eye(P, dtype=bool)
     unmatched = hungry & ~state["matched"]
     new_pending = (pending | (ll_mask & unmatched[:, None])) & ~state["matched"][:, None]
     # A pending edge only makes sense towards a buddy; rows of non-hungry

@@ -31,6 +31,9 @@ class GLBParams:
     max_supersteps: int = 1_000_000  # safety bound on the while_loop
     no_steal: bool = False    # disable balancing entirely — the "legacy
                               # static partitioning" baseline of paper §3.6
+    heartbeat_misses: int = 3  # consecutive missed load-vector gathers
+                               # before a place is declared dead (the
+                               # failure-detection window, DESIGN.md §15)
 
     def resolve_z(self, P: int) -> int:
         # Cap at ceil(log2 P): beyond that the circulant jumps 2^i wrap and

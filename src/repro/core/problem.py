@@ -47,6 +47,14 @@ class GLBProblem:
                                held in `state` (the paper's §2.6 interruptable
                                state machine mid-vertex). Counted for hunger
                                and termination, but not stealable. Optional.
+    evacuate(state, bag)    -> (state, bag). Crash recovery (DESIGN.md §15):
+                               push any in-progress work held in `state` back
+                               into the bag as ordinary items so a dead
+                               place's bag drain captures ALL of its
+                               outstanding work; must leave the state with
+                               work_in_state == 0. Required for fault
+                               injection whenever work_in_state is set;
+                               problems without in-state work don't need it.
     """
 
     name: str
@@ -59,3 +67,4 @@ class GLBProblem:
     result: Callable[[State], Any]
     reduce_op: str = "sum"
     work_in_state: Callable[[State], jax.Array] | None = None
+    evacuate: Callable[[State, Bag], Tuple[State, Bag]] | None = None

@@ -16,12 +16,15 @@ One superstep (see DESIGN.md §2 for the X10 -> BSP mapping):
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Dict, NamedTuple, Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .lifeline import lifeline_buddies, match_steals
+from . import taskbag as tb
+from .lifeline import lifeline_buddies, match_steals, rewire_lifelines
 from .params import GLBParams
 from .problem import GLBProblem
 from .stats import init_stats, update_stats
@@ -60,6 +63,7 @@ def run_sim(
     seed: int = 0,
     max_supersteps: Optional[int] = None,
     tracer=None,
+    faults=None,
 ) -> GLBRun:
     """Execute `problem` on P simulated places. Fully jit-compiled.
 
@@ -68,10 +72,31 @@ def run_sim(
     emitting one ``superstep`` span and a ``glb_load`` counter per
     iteration (one device->host sync each — the traced path trades a
     sync per superstep for the timeline; results are numerically
-    identical, asserted in ``tests/test_obs.py``)."""
+    identical, asserted in ``tests/test_obs.py``).
+
+    With a ``faults`` injector (``repro.serve.faults.FaultInjector`` —
+    one chaos harness for both workload shapes, DESIGN.md §15), the
+    host loop also runs the failure protocol: per superstep each place
+    is asked for a heartbeat; a place missing ``params.heartbeat_misses``
+    consecutive gathers is declared dead — its in-state work is
+    evacuated back into its bag (``problem.evacuate``), the bag is
+    drained wholesale into the survivors with the most headroom, its
+    pending rows/columns are cleared, and the lifeline table is rebuilt
+    over the survivors (``rewire_lifelines``). Faulted-but-undeclared
+    places are simply frozen (not processed, not matched), which IS the
+    last-known-load rule: their unchanged bag size keeps termination
+    from firing while they hold work. Accumulated per-place results
+    survive a death (the collector model: results are flushed at each
+    gather)."""
     z = params.resolve_z(P)
     buddies = jnp.asarray(lifeline_buddies(P, z))
     max_steps = max_supersteps or params.max_supersteps
+    if faults is not None and problem.work_in_state is not None \
+            and problem.evacuate is None:
+        raise ValueError(
+            f"problem {problem.name!r} holds in-state work but defines "
+            f"no evacuate hook; its mid-item window is not survivable"
+        )
 
     vprocess = jax.vmap(problem.process, in_axes=(0, 0, None))
     vsplit = jax.vmap(problem.split, in_axes=(0, None))
@@ -90,9 +115,20 @@ def run_sim(
             stats=init_stats(P),
         )
 
-    def body(c, key):
-        # 1. process
-        states, bags, processed = vprocess(c["states"], c["bags"], params.n)
+    def _body(c, key, bud, proc, active):
+        """One superstep, parameterized for the failure protocol:
+        ``bud`` is the (possibly re-wired) buddy table, ``proc`` masks
+        places that make compute progress this superstep, ``active``
+        masks places that answer the gather (may be matched). With
+        all-True masks and the static table this is exactly the
+        original no-fault superstep — the masks constant-fold."""
+        # 1. process (frozen places keep their state/bag verbatim)
+        states_n, bags_n, processed = vprocess(
+            c["states"], c["bags"], params.n
+        )
+        states = _select(proc, states_n, c["states"])
+        bags = _select(proc, bags_n, c["bags"])
+        processed = jnp.where(proc, processed, 0)
         sizes = bags["size"]
         # In-progress, non-stealable work held in state (paper §2.6's
         # interruptable state machine) counts for hunger/termination.
@@ -100,11 +136,14 @@ def run_sim(
             pend = jax.vmap(problem.work_in_state)(states).astype(jnp.int32)
         else:
             pend = jnp.zeros_like(sizes)
-        hungry = (sizes + pend) == 0
+        # Dead/unresponsive places neither give nor take this round, but
+        # their (frozen) work still blocks termination below.
+        hungry = ((sizes + pend) == 0) & active
 
         # 2-3. match thieves to victims (replicated-deterministic)
         k_step = jax.random.fold_in(key, c["step"])
-        m = match_steals(sizes, hungry, c["pending"], k_step, buddies, params)
+        m = match_steals(jnp.where(active, sizes, 0), hungry,
+                         c["pending"], k_step, bud, params)
 
         # 4. transfer: victims split, packets routed, thieves merge
         bags_split, packets = vsplit(bags, params.steal_k)
@@ -142,6 +181,10 @@ def run_sim(
             stats=stats,
         )
 
+    def body(c, key):
+        ones = jnp.ones((P,), bool)
+        return _body(c, key, buddies, ones, ones)
+
     def finish(out) -> GLBRun:
         per_place = jax.vmap(problem.result)(out["states"])
         result = reduce_result(per_place, problem.reduce_op)
@@ -153,7 +196,8 @@ def run_sim(
             converged=out["done"],
         )
 
-    if tracer is None or not getattr(tracer, "enabled", False):
+    traced = tracer is not None and getattr(tracer, "enabled", False)
+    if not traced and faults is None:
         def _run(key):
             def cond(c):
                 return (~c["done"]) & (c["step"] < max_steps)
@@ -164,23 +208,104 @@ def run_sim(
 
         return jax.jit(_run)(jax.random.key(seed))
 
-    # Traced path: host loop around the SAME jitted body — identical key
-    # folding and superstep recurrence, so results match the jitted
-    # while_loop bit-for-bit; the loop condition mirrors ``cond`` above.
-    tracer.process_name(0, f"GLB sim ({P} places)")
-    tracer.thread_name(0, 0, "supersteps")
-    step_fn = jax.jit(body)
+    # Host-loop path (traced and/or faulted): the SAME jitted body —
+    # identical key folding and superstep recurrence, so no-fault
+    # results match the jitted while_loop bit-for-bit; the loop
+    # condition mirrors ``cond`` above.
+    if traced:
+        tracer.process_name(0, f"GLB sim ({P} places)")
+        tracer.thread_name(0, 0, "supersteps")
+
+    def _put(full, one, idx):
+        """Write a single place's pytree back into the leading-P tree."""
+        return jax.tree.map(lambda f, o: f.at[idx].set(o), full, one)
+
+    def _on_death(carry, p, alive):
+        """Failure recovery for place p (all host-side; deaths are rare
+        so eager jnp is fine): evacuate in-state work, drain the bag
+        wholesale into the survivors with the most headroom, clear the
+        dead place's pending rows/columns. Whole ITEMS move (the
+        generic tail split), never problem.split — interval-halving can
+        refuse single-child items, which would strand work on a corpse."""
+        states, bags = carry["states"], carry["bags"]
+        if problem.evacuate is not None:
+            ev_s, ev_b = jax.vmap(problem.evacuate)(states, bags)
+            onehot = jnp.arange(P) == p
+            states = _select(onehot, ev_s, states)
+            bags = _select(onehot, ev_b, bags)
+        moved = 0
+        while True:
+            sizes = np.asarray(jax.device_get(bags["size"]))
+            if sizes[p] == 0:
+                break
+            surv = np.flatnonzero(alive)
+            tgt = int(surv[np.argmin(sizes[surv])])
+            take = min((int(sizes[p]) + 1) // 2, params.steal_k)
+            if int(sizes[tgt]) + take > problem.capacity:
+                raise RuntimeError(
+                    f"place {p} died with {int(sizes[p])} items but no "
+                    f"survivor has headroom for a {take}-item packet"
+                )
+            bag_p = jax.tree.map(lambda x: x[p], bags)
+            bag_p, pkt = tb.split_tail_half(bag_p, params.steal_k)
+            bag_t = problem.merge(jax.tree.map(lambda x: x[tgt], bags), pkt)
+            bags = _put(_put(bags, bag_p, p), bag_t, tgt)
+            moved += int(jax.device_get(pkt["count"]))
+        pending = carry["pending"].at[p, :].set(False).at[:, p].set(False)
+        if traced:
+            tracer.instant("bag_recovered", pid=0,
+                           args={"place": p, "items": moved})
+        return dict(carry, states=states, bags=bags, pending=pending)
+
+    alive = np.ones(P, bool)
+    misses = np.zeros(P, np.int32)
+    bud = buddies
+    step_fn = jax.jit(_body)
     key = jax.random.key(seed)
     carry = jax.jit(init_carry)()
+    ones = np.ones(P, bool)
     while (not bool(carry["done"])) and int(carry["step"]) < max_steps:
-        with tracer.span("superstep", pid=0,
-                         args={"n": int(carry["step"])}):
-            carry = step_fn(carry, key)
-            sizes = jax.device_get(carry["bags"]["size"])
-            vals = {"total": float(sizes.sum()),
-                    "hungry": float((sizes == 0).sum())}
-            if P <= 16:
-                vals.update({f"place{i}": float(v)
-                             for i, v in enumerate(sizes)})
-            tracer.counter("glb_load", vals, pid=0)
+        step_i = int(carry["step"])
+        proc, active = ones, ones
+        if faults is not None:
+            faults.begin_superstep(step_i)
+            for p in range(P):
+                if not alive[p]:
+                    continue
+                if faults.responsive(p):
+                    misses[p] = 0
+                    continue
+                misses[p] += 1
+                if misses[p] >= params.heartbeat_misses:
+                    alive[p] = False
+                    misses[p] = 0
+                    if not alive.any():
+                        raise RuntimeError("every place has died")
+                    if traced:
+                        tracer.instant(
+                            "place_dead", pid=0,
+                            args={"place": p, "superstep": step_i,
+                                  "window": params.heartbeat_misses},
+                        )
+                    carry = _on_death(carry, p, alive)
+                    bud = jnp.asarray(rewire_lifelines(alive, z))
+            proc = alive & np.asarray(
+                [faults.should_step(p) for p in range(P)]
+            )
+            active = alive & np.asarray(
+                [faults.responsive(p) for p in range(P)]
+            )
+        span = (tracer.span("superstep", pid=0, args={"n": step_i})
+                if traced else contextlib.nullcontext())
+        with span:
+            carry = step_fn(carry, key, bud, jnp.asarray(proc),
+                            jnp.asarray(active))
+            if traced:
+                sizes = jax.device_get(carry["bags"]["size"])
+                vals = {"total": float(sizes.sum()),
+                        "hungry": float((sizes == 0).sum())}
+                if P <= 16:
+                    vals.update({f"place{i}": float(v)
+                                 for i, v in enumerate(sizes)})
+                tracer.counter("glb_load", vals, pid=0)
     return jax.jit(finish)(carry)

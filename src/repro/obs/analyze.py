@@ -47,7 +47,10 @@ from .trace import validate_chrome_trace
 
 # Lifecycle phase -> attribution bucket. A "queued" segment that follows
 # a preemption is re-bucketed to "preempted": the request already held a
-# slot, so that wait is scheduler-induced, not arrival queueing.
+# slot, so that wait is scheduler-induced, not arrival queueing. A
+# "queued" segment that follows a crash re-admission (a ``readmitted``
+# instant) is re-bucketed to "recovering" for the same reason — that
+# wait is failure-induced, not arrival queueing (DESIGN.md §15).
 PHASE_BUCKET = {
     "queued": "queued",
     "prefill": "prefill",
@@ -55,7 +58,7 @@ PHASE_BUCKET = {
     "migrate": "migrating",
 }
 BUCKETS = ("queued", "prefill", "decode", "preempted", "migrating",
-           "unattributed")
+           "recovering", "unattributed")
 
 
 @dataclass
@@ -82,6 +85,7 @@ class RequestBreakdown:
     replicas: List[int]
     preemptions: int = 0
     migrations: int = 0
+    readmissions: int = 0           # crash re-admissions (replica died)
     migration_bytes: float = 0.0
     post_migration_decode_us: float = 0.0
     tokens: int = 0
@@ -127,12 +131,17 @@ class StealReport:
     """Fabric-level steal efficiency — the paper's table, from traces."""
     supersteps: int = 0
     steal_rounds: int = 0
+    tier1_rounds: int = 0           # rounds containing a queue steal
+    tier2_rounds: int = 0           # rounds containing a live migration
     tier1_moves: int = 0            # queued requests re-submitted
     tier2_moves: int = 0            # live KV migrations landed
     tier2_modes: Dict[str, int] = field(default_factory=dict)
     migration_bytes: float = 0.0
     moved_decode_us: float = 0.0    # decode time requests ran post-move
     terminated_at_superstep: Optional[int] = None
+    replicas_dead: int = 0          # replica_dead instants (DESIGN.md §15)
+    readmissions: int = 0           # request_readmitted instants
+    wedged: bool = False            # fabric_wedged instant present
 
     @property
     def moves(self) -> int:
@@ -141,6 +150,20 @@ class StealReport:
     @property
     def moves_per_steal_round(self) -> float:
         return self.moves / self.steal_rounds if self.steal_rounds else 0.0
+
+    # Per-tier round math: each tier divided by the rounds in which THAT
+    # tier fired. The old single ratio silently mixed a double-counted
+    # balancer total into one denominator, over-crediting queue steals
+    # whenever live migrations also ran.
+    @property
+    def tier1_moves_per_round(self) -> float:
+        return self.tier1_moves / self.tier1_rounds if self.tier1_rounds \
+            else 0.0
+
+    @property
+    def tier2_moves_per_round(self) -> float:
+        return self.tier2_moves / self.tier2_rounds if self.tier2_rounds \
+            else 0.0
 
     @property
     def moved_decode_us_per_kib(self) -> float:
@@ -194,6 +217,10 @@ class TraceAnalysis:
         d["steal"]["moves"] = self.steal.moves
         d["steal"]["moves_per_steal_round"] = \
             self.steal.moves_per_steal_round
+        d["steal"]["tier1_moves_per_round"] = \
+            self.steal.tier1_moves_per_round
+        d["steal"]["tier2_moves_per_round"] = \
+            self.steal.tier2_moves_per_round
         d["steal"]["moved_decode_us_per_kib"] = \
             self.steal.moved_decode_us_per_kib
         d["bucket_totals"] = self.bucket_totals()
@@ -225,6 +252,7 @@ def _parse_requests(events: Sequence[dict]
     reqs: Dict[str, RequestBreakdown] = {}
     open_phase: Dict[str, Tuple[str, float, int]] = {}
     after_preempt: Dict[str, bool] = {}
+    after_readmit: Dict[str, bool] = {}
     first_migrate_in: Dict[str, float] = {}
     migration_bytes = 0.0
 
@@ -234,7 +262,13 @@ def _parse_requests(events: Sequence[dict]
             return
         phase, t0, pid = op
         bucket = PHASE_BUCKET.get(phase, "unattributed")
-        if phase == "queued" and after_preempt.get(rid):
+        # Recovery wins over preemption: a re-admitted request's wait is
+        # failure-induced whatever else happened to it before the crash.
+        if phase == "queued" and after_readmit.get(rid):
+            bucket = "recovering"
+            after_readmit[rid] = False
+            after_preempt[rid] = False
+        elif phase == "queued" and after_preempt.get(rid):
             bucket = "preempted"
             after_preempt[rid] = False
         r = reqs[rid]
@@ -290,6 +324,9 @@ def _parse_requests(events: Sequence[dict]
                 migration_bytes += b
             elif name == "migrated_in":
                 first_migrate_in.setdefault(rid, ts)
+            elif name == "readmitted":
+                r.readmissions += 1
+                after_readmit[rid] = True
 
     for rid, r in reqs.items():
         close(rid, r.t_end)         # unterminated trace tail
@@ -369,32 +406,46 @@ def _analyze_steal(events: Sequence[dict],
     supersteps = sorted((t0, t1) for name, pid, tid, t0, t1 in spans
                         if name == "superstep")
     rep.supersteps = len(supersteps)
-    steal_ts: List[float] = []
+    tier1_ts: List[float] = []
+    tier2_ts: List[float] = []
     for ev in events:
         if ev.get("ph") != "i":
             continue
         name, args = ev.get("name"), ev.get("args") or {}
         if name == "steal_queued":
             rep.tier1_moves += int(args.get("n", 1))
-            steal_ts.append(ev.get("ts", 0.0))
+            tier1_ts.append(ev.get("ts", 0.0))
         elif name == "steal_live":
             rep.tier2_moves += 1
             mode = args.get("mode", "?")
             rep.tier2_modes[mode] = rep.tier2_modes.get(mode, 0) + 1
-            steal_ts.append(ev.get("ts", 0.0))
+            tier2_ts.append(ev.get("ts", 0.0))
         elif name == "terminated":
             rep.terminated_at_superstep = int(args.get("superstep", 0))
-    rounds = 0
-    for t0, t1 in supersteps:
-        if any(t0 <= ts <= t1 for ts in steal_ts):
-            rounds += 1
-    # Steals emitted outside any superstep span (manual balance() calls)
-    # still count as one round each so efficiency is never divided by 0.
-    if not supersteps and steal_ts:
-        rounds = len(steal_ts)
-    rep.steal_rounds = rounds
+        elif name == "replica_dead":
+            rep.replicas_dead += 1
+        elif name == "request_readmitted":
+            rep.readmissions += 1
+        elif name == "fabric_wedged":
+            rep.wedged = True
+
+    def _rounds(ts_list: List[float]) -> int:
+        if not supersteps:
+            # Steals emitted outside any superstep span (manual
+            # balance() calls) count one round each so efficiency is
+            # never divided by 0.
+            return len(ts_list)
+        return sum(1 for t0, t1 in supersteps
+                   if any(t0 <= ts <= t1 for ts in ts_list))
+
+    rep.tier1_rounds = _rounds(tier1_ts)
+    rep.tier2_rounds = _rounds(tier2_ts)
+    rep.steal_rounds = _rounds(tier1_ts + tier2_ts)
+    # Only genuinely MIGRATED requests (a migrated_out was traced) credit
+    # the steal-efficiency numerator: decode run after a crash
+    # re-admission is recovery, not stealing, and shipped zero bytes.
     rep.moved_decode_us = sum(r.post_migration_decode_us
-                              for r in requests)
+                              for r in requests if r.migrations > 0)
     return rep
 
 
@@ -521,10 +572,19 @@ def render_markdown(analysis: TraceAnalysis,
                  f"{s.tier2_moves} live KV"
                  + (f" {s.tier2_modes}" if s.tier2_modes else "") + ")")
     lines.append(f"- moves per steal round: "
-                 f"{s.moves_per_steal_round:.2f}")
+                 f"{s.moves_per_steal_round:.2f} "
+                 f"(tier-1 {s.tier1_moves_per_round:.2f}/round over "
+                 f"{s.tier1_rounds}, tier-2 "
+                 f"{s.tier2_moves_per_round:.2f}/round over "
+                 f"{s.tier2_rounds})")
     lines.append(f"- migration payload: {s.migration_bytes / 1024:.1f} "
                  f"KiB; decode time moved: {_us(s.moved_decode_us)} "
                  f"({s.moved_decode_us_per_kib:.1f} us/KiB)")
+    if s.replicas_dead or s.readmissions or s.wedged:
+        lines.append(
+            f"- **failures**: {s.replicas_dead} replica(s) dead, "
+            f"{s.readmissions} request(s) re-admitted"
+            + (", **fabric wedged**" if s.wedged else ""))
     lines.append("")
 
     p99 = a.p99_request()
@@ -568,6 +628,11 @@ def render_summary(analysis: TraceAnalysis) -> str:
             f"  steals: {s.moves} move(s) in {s.steal_rounds} round(s), "
             f"{s.migration_bytes / 1024:.1f} KiB shipped, "
             f"{s.moved_decode_us_per_kib:.1f} us decode/KiB")
+    if s.replicas_dead or s.wedged:
+        lines.append(
+            f"  failures: {s.replicas_dead} replica(s) dead, "
+            f"{s.readmissions} re-admission(s)"
+            + (", fabric WEDGED" if s.wedged else ""))
     p99 = a.p99_request()
     if p99 is not None:
         lines.append(f"  p99 request {p99.rid}: {_us(p99.wall_us)} "

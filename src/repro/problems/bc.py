@@ -161,6 +161,21 @@ def bc_problem(adj: np.ndarray, capacity: int = 512, static_init: bool = True):
         items, count = tb.compact_block(give, splittable)
         return bag2, {"items": items, "count": count}
 
+    def evacuate(state, bag):
+        # Crash recovery (DESIGN.md §15): re-bag the in-progress source
+        # vertex as a width-1 interval and reset the sweep. Exact,
+        # because ``bc`` only accumulates when a backward sweep
+        # FINISHES — a restarted vertex recomputes from scratch on the
+        # survivor and contributes exactly once.
+        v = jnp.maximum(state["cur"], 0)
+        bag = tb.push_block(
+            bag, {"lo": v[None], "hi": (v + 1)[None]},
+            (state["cur"] >= 0).astype(jnp.int32),
+        )
+        state = dict(state, cur=jnp.int32(-1), phase=jnp.int32(0),
+                     level=jnp.int32(0))
+        return state, bag
+
     return GLBProblem(
         name=f"bc-n{n}",
         item_spec=ITEM_SPEC,
@@ -172,4 +187,5 @@ def bc_problem(adj: np.ndarray, capacity: int = 512, static_init: bool = True):
         result=lambda st: st["bc"],
         reduce_op="sum",
         work_in_state=lambda st: (st["cur"] >= 0).astype(jnp.int32),
+        evacuate=evacuate,
     )

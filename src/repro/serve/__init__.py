@@ -4,6 +4,7 @@ attention), paged KV-cache pool, radix prefix cache (shared-prefix KV
 reuse + chunked prefill), admission/preemption scheduler, and the GLB
 replica balancer."""
 from .engine import Engine, GLBReplicaBalancer, Request  # noqa: F401
+from .faults import Fault, FaultInjector  # noqa: F401
 from .kvpool import KVPool, PoolExhausted, PoolStats  # noqa: F401
 from .radix import RadixPrefixCache  # noqa: F401
 from .scheduler import ContinuousBatchingScheduler, StepPlan  # noqa: F401

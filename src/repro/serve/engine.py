@@ -64,7 +64,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (GLBParams, fabric_summary, lifeline_buddies,
-                        match_steals, merge_place_stats, terminated)
+                        match_steals, merge_place_stats, rewire_lifelines,
+                        terminated)
 from repro.core.autotune import paged_block_kv
 from repro.models import (decode_step, forward, make_cache,
                           make_paged_cache, sample_tokens)
@@ -1055,14 +1056,31 @@ class GLBReplicaBalancer:
     doubles as the termination detector (``core.lifeline.terminated`` —
     all loads zero), so ``run`` has no second polling loop over the
     engines; ``collect`` merges per-replica stats into the fabric-level
-    result (the paper's hidden termination + result collection, §2.4)."""
+    result (the paper's hidden termination + result collection, §2.4).
+
+    Failure semantics (DESIGN.md §15): the same load-vector gather is the
+    heartbeat. With a ``faults`` injector attached, a replica that misses
+    ``heartbeat_misses`` consecutive gathers is declared dead — fenced
+    forever (never stepped again, even if it later wakes), its lifelines
+    re-wired over the survivors (``core.rewire_lifelines``), its pending
+    rows/columns cleared — and its lost requests are re-admitted from the
+    balancer's submission ledger: queued casualties re-enter a survivor's
+    queue, running casualties land as recompute resumes (the PR 5
+    migration mode with ``kv=None``). While a replica is unresponsive but
+    not yet declared dead its last-known load stands in, so a wedged
+    replica holding all remaining work can never trigger spurious
+    termination."""
 
     def __init__(self, engines: List[Engine],
                  params: GLBParams = GLBParams(),
-                 migrate: bool = False, tracer=None, slo=None):
+                 migrate: bool = False, tracer=None, slo=None,
+                 faults=None, heartbeat_misses: Optional[int] = None):
         self.engines = engines
         self.params = params
         self.migrate = migrate
+        self.faults = faults
+        self.heartbeat_misses = (heartbeat_misses if heartbeat_misses
+                                 is not None else params.heartbeat_misses)
         # Fabric-level trace track: supersteps, the load vector, steal
         # and termination instants live on their own pid, one past the
         # highest replica id (replica tracks keep their own pids).
@@ -1091,34 +1109,78 @@ class GLBReplicaBalancer:
         self._step = 0
         self._rr = 0                   # submission counter: placement must
                                        # not depend on rid density
-        self.moves = 0                 # tier-1: queued requests stolen
+        self.queue_moves = 0           # tier-1: queued requests stolen
         self.migrations = 0            # tier-2: live sequences migrated
+        self.sterile_steals = 0        # matched pairs where nothing moved
         self.migration_modes = {"live": 0, "seeded": 0, "recompute": 0}
         self.supersteps = 0
         self.terminated = False
+        # --------------------------- failure detection / recovery state
+        self.metrics = MetricsRegistry()
+        self._alive = [True] * P
+        self._misses = [0] * P          # consecutive missed heartbeats
+        self._last_load = [0] * P       # load at last answered gather
+        self._ledger: dict = {}         # rid -> Request, every submission
+        self.replicas_dead = 0
+        self.readmitted_queued = 0
+        self.readmitted_running = 0
+
+    @property
+    def moves(self) -> int:
+        """Total requests moved between replicas (both tiers). Tier-1
+        queue steals and tier-2 live migrations are counted separately
+        (``queue_moves`` / ``migrations``) — this is their sum, never a
+        double-count."""
+        return self.queue_moves + self.migrations
+
+    @property
+    def alive(self) -> List[bool]:
+        return list(self._alive)
 
     def submit(self, req: Request, rr: Optional[int] = None):
         """Round-robin placement by an internal submission counter —
         ``rid % P`` skews badly when rids are strided or clustered (e.g.
         all-even rids land every request on replica 0 of 2). ``rr``
-        overrides the counter for adversarial test placement."""
+        overrides the counter for adversarial test placement.
+
+        Every submission is recorded in the recovery ledger: if the
+        hosting replica later dies, the ledger (minus finished requests
+        and requests observed live on survivors) is exactly the lost
+        set. Placement only considers replicas still alive."""
+        self._ledger[req.rid] = req
+        alive = [i for i in range(len(self.engines)) if self._alive[i]]
+        if not alive:
+            raise RuntimeError("replica fabric has no surviving replica")
         if rr is None:
-            i = self._rr % len(self.engines)
+            i = alive[self._rr % len(alive)]
             self._rr += 1
         else:
-            i = rr % len(self.engines)
+            i = alive[rr % len(alive)]
         self.engines[i].submit(req)
+        # Keep the stand-in load fresh: a submission is balancer-local
+        # knowledge, not something a heartbeat needs to discover.
+        self._last_load[i] = self.engines[i].load
 
-    def _stealable(self, e: Engine) -> int:
+    def _stealable(self, e: Engine, thieves: List[Engine]) -> int:
         """One replica's entry in the GLB size vector: its queue depth,
         or — migration tier — its shed-candidate count when the queue is
         empty but every slot is busy (minus the one sequence a victim
-        always keeps)."""
+        always keeps).
+
+        The migration-tier count only includes candidates at least one
+        currently-hungry thief ``can_host`` — advertised load must be
+        load that can actually move. The unfiltered count made a victim
+        whose only hungry peer is incompatible (block-size/max_seq
+        mismatch) advertise forever, producing a sterile steal match
+        every superstep that starved other edges of the matching."""
         q = len(e.queue)
         if q:
             return q
         if self.migrate and e.paged and e.free_slots == 0:
-            return max(len(e.migratable_slots()) - 1, 0)
+            cands = [s for s in e.migratable_slots()
+                     if any(t.can_host(int(e.lens[s])) for t in thieves
+                            if t is not e)]
+            return max(len(cands) - 1, 0)
         return 0
 
     def _steal_live(self, thief: Engine, victim: Engine) -> None:
@@ -1133,11 +1195,16 @@ class GLBReplicaBalancer:
         # GLB steal-half: ship half the victim's running set, bounded by
         # what it may shed and the slots the thief can absorb into.
         take = min(running // 2, sheddable, thief.free_slots)
+        if take == 0:
+            # A matched edge that moved nothing: the size vector promised
+            # load this thief cannot absorb. _stealable()'s hungry-aware
+            # filter makes this unreachable for single-thief fabrics;
+            # counted so tests (and ops) can see residual mismatches.
+            self.sterile_steals += 1
         for slot in cands[:take]:
             mode = thief.migrate_in(victim.migrate_out(slot))
             self.migrations += 1
             self.migration_modes[mode] += 1
-            self.moves += 1
             if self.tracer.enabled:
                 self.tracer.instant(
                     "steal_live", pid=self._fabric_pid,
@@ -1145,11 +1212,166 @@ class GLBReplicaBalancer:
                           "thief": thief.replica_id, "mode": mode},
                 )
 
+    # ------------------------------------------------- failure detection
+    def _responsive(self, i: int) -> bool:
+        return self.faults is None or self.faults.responsive(i)
+
+    def _observed_load(self, i: int) -> int:
+        """The load-vector entry for replica i: its real load when it
+        answers the gather, its last-known load while unresponsive (a
+        wedged replica holding all remaining work must not read as 0 —
+        that would fire spurious termination), and 0 once declared
+        dead (its work has been re-admitted elsewhere)."""
+        if not self._alive[i]:
+            return 0
+        if not self._responsive(i):
+            return self._last_load[i]
+        self._last_load[i] = self.engines[i].load
+        return self._last_load[i]
+
+    def _detect_failures(self) -> None:
+        """Heartbeat bookkeeping riding the load gather: a replica that
+        misses ``heartbeat_misses`` CONSECUTIVE gathers is declared
+        dead. One answered gather resets the window, so a slow replica
+        (responsive, little progress) is never declared dead and a hang
+        shorter than the window is absorbed with no recovery."""
+        if self.faults is None:
+            return
+        for i in range(len(self.engines)):
+            if not self._alive[i]:
+                continue
+            if self.faults.responsive(i):
+                self._misses[i] = 0
+                continue
+            self._misses[i] += 1
+            if self._misses[i] >= self.heartbeat_misses:
+                self._declare_dead(i)
+
+    def _declare_dead(self, i: int) -> None:
+        """Fence replica i forever and run loss recovery: re-wire the
+        lifeline topology over the survivors, clear the dead replica's
+        pending rows/columns, and re-admit its lost requests. The dead
+        engine object is never touched again — a zombie that wakes up
+        after declaration is ignored (it is not stepped, not gathered,
+        and its requests already have a new single owner)."""
+        self._alive[i] = False
+        self._misses[i] = 0
+        if not any(self._alive):
+            raise RuntimeError("every replica has died")
+        self.replicas_dead += 1
+        self.metrics.counter("replicas_dead").inc()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "replica_dead", pid=self._fabric_pid,
+                args={"replica": self.engines[i].replica_id,
+                      "superstep": self.supersteps,
+                      "window": self.heartbeat_misses},
+            )
+        z = int(self._buddies.shape[1])
+        self._buddies = jnp.asarray(
+            rewire_lifelines(np.asarray(self._alive), z)
+        )
+        pend = np.asarray(self._pending).copy()
+        pend[i, :] = False     # its remembered requests die with it
+        pend[:, i] = False     # nobody waits on a dead buddy
+        self._pending = jnp.asarray(pend)
+        self._recover(i)
+
+    def _recover(self, dead: int) -> None:
+        """Re-admit every request lost with replica ``dead``. Lost = in
+        the submission ledger, not finished, and not observed live on
+        any survivor — computed WITHOUT reading the dead engine (its
+        state is unreachable by assumption; steals and migrations mean
+        its original placement says nothing about current ownership).
+
+        Queued casualties re-enter a survivor's queue (plain submit);
+        running casualties (``req.out`` non-empty) are reconstructed as
+        recompute resumes via the migration landing path with
+        ``kv=None`` — the prompt and the already-streamed tokens are all
+        that is needed, so greedy outputs stay token-identical to a
+        crash-free run."""
+        if not any(self._alive):
+            raise RuntimeError("replica fabric lost every replica")
+        live_rids = set()
+        for j, e in enumerate(self.engines):
+            if not self._alive[j]:
+                continue
+            live_rids.update(r.rid for r in e.queue)
+            live_rids.update(r.rid for r in e.slots if r is not None)
+        lost = sorted(
+            (r for rid, r in self._ledger.items()
+             if not r.done and rid not in live_rids),
+            key=lambda r: r.rid,
+        )
+        for req in lost:
+            if req.out:
+                self._readmit_running(req, dead)
+            else:
+                self._readmit_queued(req, dead)
+
+    def _trace_readmit(self, req: Request, dead: int, mode: str,
+                       to: int) -> None:
+        if not self.tracer.enabled:
+            return
+        self.tracer.req_instant(
+            req.rid, "readmitted", pid=self._fabric_pid,
+            args={"from": self.engines[dead].replica_id, "mode": mode},
+        )
+        self.tracer.instant(
+            "request_readmitted", pid=self._fabric_pid,
+            args={"rid": req.rid, "mode": mode,
+                  "from": self.engines[dead].replica_id,
+                  "to": self.engines[to].replica_id},
+        )
+
+    def _readmit_queued(self, req: Request, dead: int) -> None:
+        alive = [i for i in range(len(self.engines)) if self._alive[i]]
+        to = alive[self._rr % len(alive)]
+        self._trace_readmit(req, dead, "queued", to)
+        self.submit(req)        # advances _rr, lands on `to`
+        self.readmitted_queued += 1
+        self.metrics.counter("requests_readmitted").inc()
+
+    def _readmit_running(self, req: Request, dead: int) -> None:
+        target = None
+        for j, e in enumerate(self.engines):
+            if not self._alive[j] or not e.paged:
+                continue
+            if e.can_host(len(e._prefix_tokens(req))):
+                target = j
+                break
+        if target is None:
+            # The non-survivable case (DESIGN.md §15): a running
+            # sequence needs a paged survivor whose max_seq fits the
+            # recompute prefix. Contiguous engines have no resume path.
+            raise RuntimeError(
+                f"request {req.rid} ({len(req.out)} tokens in) lost with "
+                f"replica {dead}: no surviving paged replica can host "
+                f"its recompute resume"
+            )
+        eng = self.engines[target]
+        tokens = eng._prefix_tokens(req)
+        self._trace_readmit(req, dead, "recompute", target)
+        mig = Migration(req=req, tokens=tokens, written=len(tokens),
+                        block_size=0, kv=None)
+        eng.migrate_in(mig)     # kv=None -> recompute requeue, front
+        self._ledger[req.rid] = req
+        self.readmitted_running += 1
+        self.metrics.counter("requests_readmitted").inc()
+
     def balance(self) -> bool:
         """One balancing pass. Returns True when the fabric is done —
         the load vector gathered for the steal matching doubles as the
-        GLB termination detector, so callers need no separate poll."""
-        loads = np.asarray([e.load for e in self.engines], np.int32)
+        GLB termination detector, so callers need no separate poll (and,
+        with a fault injector attached, the same gather is the
+        heartbeat: see ``_detect_failures``)."""
+        if self.faults is not None:
+            self.faults.begin_superstep(self.supersteps)
+        self._detect_failures()
+        loads = np.asarray(
+            [self._observed_load(i) for i in range(len(self.engines))],
+            np.int32,
+        )
         if self.slo is not None:
             self.slo.check()
         if self.tracer.enabled:
@@ -1166,10 +1388,21 @@ class GLBReplicaBalancer:
                 self.tracer.instant("terminated", pid=self._fabric_pid,
                                     args={"superstep": self.supersteps})
             return True
-        sizes = np.asarray([self._stealable(e) for e in self.engines],
-                           np.int32)
+        # Dead and unresponsive replicas neither give nor take: their
+        # sizes are 0 and they are never hungry, so the matching routes
+        # around them; pending edges toward them were cleared at death.
+        active = [self._alive[i] and self._responsive(i)
+                  for i in range(len(self.engines))]
+        thieves = [e for i, e in enumerate(self.engines)
+                   if active[i] and e.can_accept() and len(e.queue) == 0]
+        sizes = np.asarray(
+            [self._stealable(e, thieves) if active[i] else 0
+             for i, e in enumerate(self.engines)],
+            np.int32,
+        )
         hungry = np.asarray(
-            [e.can_accept() and len(e.queue) == 0 for e in self.engines]
+            [active[i] and e.can_accept() and len(e.queue) == 0
+             for i, e in enumerate(self.engines)]
         )
         m = match_steals(
             jnp.asarray(sizes), jnp.asarray(hungry), self._pending,
@@ -1190,7 +1423,7 @@ class GLBReplicaBalancer:
                     # Oldest-first: stolen requests keep their arrival
                     # order on the thief, not the victim's inverted tail.
                     self.engines[thief].submit(v.queue.popleft())
-                    self.moves += 1
+                    self.queue_moves += 1
                 if self.tracer.enabled:
                     self.tracer.instant(
                         "steal_queued", pid=self._fabric_pid,
@@ -1203,21 +1436,43 @@ class GLBReplicaBalancer:
         self._step += 1
         return False
 
-    def run(self, max_steps: int = 10_000):
+    def run(self, max_steps: int = 10_000) -> str:
         """Drive the fabric to completion: balance, superstep every
         engine, repeat until the balance pass reports termination. Each
         iteration is a ``superstep`` span on the fabric track (a no-op
         context manager when tracing is off — per superstep, not per
-        token)."""
+        token).
+
+        Returns ``"terminated"`` (GLB termination fired) or
+        ``"wedged"`` (``max_steps`` exhausted with work outstanding —
+        also emitted as a ``fabric_wedged`` trace instant, so a stuck
+        fabric is distinguishable from a finished one without poking at
+        internals). Dead replicas are fenced (never stepped); a faulted
+        replica only steps when the injector says it makes progress."""
         while max_steps > 0:
             with self.tracer.span("superstep", pid=self._fabric_pid,
                                   args={"n": self.supersteps}):
                 if self.balance():
                     break
-                for e in self.engines:
+                for i, e in enumerate(self.engines):
+                    if not self._alive[i]:
+                        continue
+                    if self.faults is not None \
+                            and not self.faults.should_step(i):
+                        continue
                     e.step()
                 self.supersteps += 1
             max_steps -= 1
+        if self.terminated:
+            return "terminated"
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "fabric_wedged", pid=self._fabric_pid,
+                args={"supersteps": self.supersteps,
+                      "loads": [int(self._observed_load(i))
+                                for i in range(len(self.engines))]},
+            )
+        return "wedged"
 
     # ------------------------------------------------------ result collection
     def collect(self) -> dict:
@@ -1227,8 +1482,13 @@ class GLBReplicaBalancer:
         merged = merge_place_stats([e.stats() for e in self.engines])
         merged["_balancer"] = {
             "moves": self.moves,
+            "queue_moves": self.queue_moves,
             "migrations": self.migrations,
+            "sterile_steals": self.sterile_steals,
             "supersteps": self.supersteps,
+            "replicas_dead": self.replicas_dead,
+            "readmitted_queued": self.readmitted_queued,
+            "readmitted_running": self.readmitted_running,
             **{f"mig_{k}": v for k, v in self.migration_modes.items()},
         }
         if self.slo is not None:
@@ -1243,7 +1503,9 @@ class GLBReplicaBalancer:
         fabric scrape."""
         for e in self.engines:
             e.stats()               # sync attr-backed gauges first
-        return MetricsRegistry.merged([e.metrics for e in self.engines])
+        return MetricsRegistry.merged(
+            [e.metrics for e in self.engines] + [self.metrics]
+        )
 
     def report(self) -> str:
         """Human-readable fabric summary (``core.stats.fabric_summary``
@@ -1252,12 +1514,20 @@ class GLBReplicaBalancer:
         lines = [fabric_summary(self.collect(), title="replica fabric",
                                 places=len(self.engines))]
         lines.append(
-            f"  balancer: {self.moves} moves ({self.migrations} live "
-            f"migrations: {self.migration_modes['live']} live / "
+            f"  balancer: {self.moves} moves ({self.queue_moves} queued "
+            f"+ {self.migrations} live migrations: "
+            f"{self.migration_modes['live']} live / "
             f"{self.migration_modes['seeded']} seeded / "
             f"{self.migration_modes['recompute']} recompute), "
             f"{self.supersteps} supersteps, terminated={self.terminated}"
         )
+        if self.replicas_dead:
+            lines.append(
+                f"  failures: {self.replicas_dead} replica(s) dead, "
+                f"{self.readmitted_queued + self.readmitted_running} "
+                f"requests re-admitted ({self.readmitted_queued} queued "
+                f"/ {self.readmitted_running} recompute)"
+            )
         if self.slo is not None:
             lines += [f"  {ln}" for ln in self.slo.report_lines()]
         return "\n".join(lines)
