@@ -21,6 +21,13 @@ numpy ones on the TTFT rows, and the live-migration arm run under a
 real ``Tracer`` whose validated Chrome trace JSON is written to
 ``BENCH_serve_trace.json`` (uploaded by CI next to the bench JSON).
 
+PR 10 adds the predictive-balancing pair on a wedge+backlog workload:
+short requests queued behind a hot replica's wedged slots, reactive
+stealing vs cost-modeled diffusion (``serve_skew_predictive``, TTFT in
+deterministic supersteps) plus the reactive-parity row
+(``serve_skew_parity``: cost model attached, predictor off, decision
+log byte-identical to plain reactive — the §16 contract).
+
 Steady-state measurement: all slots admitted and kernels compiled before
 the timer starts, so the numbers isolate the engine decode loop itself.
 The model is a deliberately tiny 1-layer config — on CPU the per-token
@@ -65,6 +72,19 @@ SKEW_BLOCKS = 36        # fits 2 full seqs + lookahead comfortably, NOT 4:
 SKEW_CHUNK = 16         # chunked prefill makes a recompute resume COST
                         # supersteps — the work live migration avoids
 TRACE_PATH = "BENCH_serve_trace.json"   # Chrome trace artifact (CI upload)
+# predictive-vs-reactive arm (DESIGN.md §16): the same wedged fabric
+# plus a backlog of short requests queued behind the wedge. Reactive
+# stealing only moves the backlog when the cold replica starves;
+# predictive diffusion moves it as soon as predicted block-seconds are
+# imbalanced. TTFT is measured in SUPERSTEPS (first-token superstep per
+# short request), so the headline comparison is deterministic and gates
+# hard; the parity arm re-runs the reactive scenario with the cost
+# model ATTACHED but predictive OFF and must reproduce the reactive
+# decision log byte-for-byte.
+PRED_LONG_MAX_NEW = 64
+PRED_SHORT_MAX_NEW = 8
+PRED_SHORTS = 4
+PRED_TRACE_PATH = "BENCH_serve_predictive_trace.json"
 # crash-recovery chaos arm (DESIGN.md §15): a 3-replica fabric loses one
 # replica mid-flight; the deterministic acceptance metrics are zero lost
 # requests, greedy-token-identical outputs vs an identical clean fabric,
@@ -280,6 +300,63 @@ def _skew_arm(cfg, params, migrate, tracer=None):
     return _drive_skew(engines, migrate, rid0=0, tracer=tracer)
 
 
+def _drive_skew_pred(engines, bal, rid0=0):
+    """Wedge + backlog: PRED long requests admitted into every replica-0
+    slot, then short requests queued behind them, cold replica idle.
+    Drives the fabric superstep-by-superstep recording the superstep at
+    which each short request produced its first token — TTFT in
+    SUPERSTEPS, deterministic under greedy decode + deterministic
+    matching. Returns (wall_s, supersteps, preemptions, short TTFT p99
+    in supersteps, decision log)."""
+    longs = [Request(rid=rid0 + r, prompt=[3, r + 1, 4],
+                     max_new=PRED_LONG_MAX_NEW, tenant="long")
+             for r in range(SKEW_SLOTS)]
+    for r in longs:
+        bal.submit(r, rr=0)
+    engines[0].step()           # wedge: hot replica admits every slot
+    shorts = [Request(rid=rid0 + 100 + r, prompt=[5, r + 1, 6],
+                      max_new=PRED_SHORT_MAX_NEW, tenant="short")
+              for r in range(PRED_SHORTS)]
+    for r in shorts:
+        bal.submit(r, rr=0)
+    p0 = sum(e.sched.preemptions for e in engines)
+    first = {}
+    t0 = time.time()
+    for _ in range(2000):
+        if bal.balance():
+            break
+        for e in engines:
+            e.step()
+        bal.supersteps += 1
+        for r in shorts:
+            if r.rid not in first and r.out:
+                first[r.rid] = bal.supersteps
+    dt = time.time() - t0
+    assert all(r.done for r in longs + shorts)
+    preempts = sum(e.sched.preemptions for e in engines) - p0
+    ttfts = [first[r.rid] for r in shorts]
+    return (dt, bal.supersteps, preempts,
+            float(np.percentile(ttfts, 99)), list(bal.decisions))
+
+
+def _pred_arm(cfg, params, cost_model=None, predictive=False,
+              tracer=None):
+    """Warm run compiles every trace (and, with a cost model, seeds the
+    per-tenant decode histograms — the steady-state an online predictor
+    lives in), then the timed run reuses the drained engines under a
+    FRESH balancer so its decision log covers exactly one scenario."""
+    engines = _mk_skew_engines(cfg, params, tracer=tracer)
+
+    def mk_bal():
+        return GLBReplicaBalancer(engines, migrate=True, tracer=tracer,
+                                  cost_model=cost_model,
+                                  predictive=predictive)
+
+    _drive_skew_pred(engines, mk_bal(), rid0=20_000)
+    bal = mk_bal()
+    return _drive_skew_pred(engines, bal, rid0=0), bal
+
+
 def _chaos_arm(cfg, params, faults=None):
     """One fabric run for the crash-recovery row: CHAOS_REQS requests
     round-robined over CHAOS_REPLICAS paged replicas; with ``faults``,
@@ -432,6 +509,33 @@ def run():
     problems = validate_chrome_trace(tracer.to_chrome())
     assert not problems, problems
 
+    # Predictive vs reactive on the wedge+backlog scenario. Everything
+    # gated is deterministic (supersteps, preemptions, first-token
+    # supersteps, decision-log identity), so the ISSUE contract asserts
+    # inline AND gates hard in compare.py: predictive must terminate in
+    # no more supersteps with no more preemptions and no worse short
+    # TTFT, and the parity arm (cost model attached, predictor OFF)
+    # must reproduce the reactive decision log exactly.
+    from repro.serve.cost import CostModel
+    (dt_r, steps_r, pre_r, ttft_r, dec_r), _ = _pred_arm(cfg, params)
+    (dt_par, steps_par, _, _, dec_par), _ = _pred_arm(
+        cfg, params, cost_model=CostModel())
+    ptracer = Tracer()
+    (dt_p, steps_p, pre_p, ttft_p, _), bal_p = _pred_arm(
+        cfg, params, cost_model=CostModel(), predictive=True,
+        tracer=ptracer)
+    ptracer.write(PRED_TRACE_PATH)
+    assert not validate_chrome_trace(ptracer.to_chrome())
+    parity = int(dec_par == dec_r and steps_par == steps_r)
+    assert parity == 1, (
+        f"reactive parity broken: {dec_par} != {dec_r} "
+        f"or {steps_par} != {steps_r}"
+    )
+    assert steps_p <= steps_r, (steps_p, steps_r)
+    assert pre_p <= pre_r, (pre_p, pre_r)
+    assert ttft_p <= ttft_r, (ttft_p, ttft_r)
+    cost_snap = bal_p.cost_model.snapshot()
+
     # Crash recovery: identical fabric clean vs one replica crashed
     # mid-flight. The crashed arm must terminate with zero lost
     # requests and greedy-token-identical outputs (HARD gates); the
@@ -512,6 +616,21 @@ def run():
          f"steps_vs_queue_steal={steps_m / max(steps_q, 1):.2f}x;"
          f"wall_vs_queue_steal={dt_m / max(dt_q, 1e-9):.2f}x;"
          f"trace_events={len(tracer.events)};trace={TRACE_PATH}"),
+        ("serve_skew_predictive", 1e6 * dt_p,
+         f"makespan_s={dt_p:.2f};makespan_steps={steps_p};"
+         f"reactive_steps={steps_r};"
+         f"steps_vs_reactive={steps_p / max(steps_r, 1):.2f}x;"
+         f"preemptions={pre_p};reactive_preemptions={pre_r};"
+         f"ttft_p99_steps={ttft_p:.0f};"
+         f"reactive_ttft_p99_steps={ttft_r:.0f};"
+         f"diffusion_moves={bal_p.diffusion_moves};"
+         f"predictions={cost_snap['cost_predictions']};"
+         f"mean_abs_err_tokens={cost_snap['cost_mean_abs_err_tokens']:.1f};"
+         f"wall_vs_reactive={dt_p / max(dt_r, 1e-9):.2f}x;"
+         f"trace_events={len(ptracer.events)};trace={PRED_TRACE_PATH}"),
+        ("serve_skew_parity", 1e6 * dt_par,
+         f"decisions_identical={parity};decisions={len(dec_par)};"
+         f"makespan_steps={steps_par};reactive_steps={steps_r}"),
         ("serve_crash_recovery", 1e6 * dt_cr,
          f"makespan_s={dt_cr:.2f};makespan_steps={bal_cr.supersteps};"
          f"clean_steps={bal_cl.supersteps};"

@@ -84,6 +84,25 @@ GATES = [
          note="a live flight recorder adds ZERO device drains"),
     Gate("serve", "serve_flight_overhead", "dump_valid", "higher", 0.0,
          note="wrapped ring must dump a validator-clean trace"),
+    # Predictive balancing (DESIGN.md §16): supersteps, preemptions and
+    # first-token supersteps are deterministic under greedy decode +
+    # deterministic diffusion/matching, so the predictive-vs-reactive
+    # contract gates hard at its committed values; the parity row is
+    # THE regression tripwire for "predictor off == today's balancer".
+    Gate("serve", "serve_skew_predictive", "steps_vs_reactive", "lower",
+         0.0, abs_tol=0.05,
+         note="predictive makespan must stay <= reactive supersteps"),
+    Gate("serve", "serve_skew_predictive", "ttft_p99_steps", "lower",
+         0.0, abs_tol=1.0,
+         note="short-request TTFT p99 in supersteps, predictive arm"),
+    Gate("serve", "serve_skew_predictive", "preemptions", "lower", 0.0,
+         abs_tol=1.0, note="diffusion moves work BEFORE thrash"),
+    Gate("serve", "serve_skew_predictive", "diffusion_moves", "higher",
+         0.0, note="the predictive arm must actually diffuse (else the "
+                   "scenario no longer exercises the cost model)"),
+    Gate("serve", "serve_skew_parity", "decisions_identical", "higher",
+         0.0, note="predictor off must reproduce the reactive decision "
+                   "log byte-for-byte (0/1)"),
     # Crash recovery (DESIGN.md §15): deterministic fabric — greedy
     # decode + heartbeat window on the superstep clock — so the loss
     # and identity contracts gate hard at exactly their ideal values.

@@ -27,6 +27,15 @@ decoding resumes there greedy-token-identically (DESIGN.md §9). The
 run ends via GLB termination detection (the balance pass's load vector)
 and prints the fabric-level merged stats report.
 
+``--predictive`` attaches the per-tenant decode-length cost model
+(DESIGN.md §16): the balancer diffuses predicted block-seconds off
+overloaded replicas BEFORE anyone starves, with the reactive lifeline
+tiers as backstop; the exit report gains a predictive line (diffusion
+moves, predictions scored, mean |error|). ``--slo-admission`` (needs
+``--slo`` with a ``ttft_ms`` or ``queue_wait_ms`` target and
+``--paged``) makes each scheduler admit urgent-first by predicted SLO
+slack and pace relaxed admissions.
+
 ``--trace PATH`` records the whole run — request lifecycle spans across
 replicas, engine steps, prefill chunks, steal/migration events — as
 Chrome trace_event JSON: open the file at https://ui.perfetto.dev.
@@ -69,6 +78,15 @@ def main():
                     help="steal LIVE sequences (KV migration) when a "
                          "victim's queue is empty but its slots are "
                          "saturated (requires --paged)")
+    ap.add_argument("--predictive", action="store_true",
+                    help="cost-modeled diffusive balancing: move "
+                         "predicted block-seconds off overloaded "
+                         "replicas before starvation fires "
+                         "(DESIGN.md §16)")
+    ap.add_argument("--slo-admission", action="store_true",
+                    help="SLO-aware admission ordering/pacing per "
+                         "replica (requires --paged and --slo with a "
+                         "ttft_ms or queue_wait_ms target)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write a Perfetto-loadable Chrome trace JSON "
                          "of the run to PATH")
@@ -115,6 +133,15 @@ def main():
     else:
         tracer = None
     slo = SLOMonitor(parse_slo_spec(args.slo)) if args.slo else None
+    if args.slo_admission:
+        if not args.paged or slo is None:
+            ap.error("--slo-admission requires --paged and --slo with "
+                     "a ttft_ms or queue_wait_ms target")
+        kw.update(slo=slo, slo_admission=True)
+    cost_model = None
+    if args.predictive:
+        from repro.serve.cost import CostModel
+        cost_model = CostModel()
     faults = None
     if args.chaos:
         from repro.serve.faults import FaultInjector
@@ -122,7 +149,9 @@ def main():
     engines = [Engine(cfg, params, tracer=tracer, replica_id=i, **kw)
                for i in range(args.replicas)]
     bal = GLBReplicaBalancer(engines, migrate=args.migrate, tracer=tracer,
-                             slo=slo, faults=faults)
+                             slo=slo, faults=faults,
+                             cost_model=cost_model,
+                             predictive=args.predictive)
 
     # Heterogeneous lengths: the first few requests run long, so replicas
     # that drew short ones go hungry while a peer is still wedged on
@@ -161,6 +190,10 @@ def main():
         mode += "+migrate"
     if args.chaos:
         mode += "+chaos"
+    if args.predictive:
+        mode += "+predictive"
+    if args.slo_admission:
+        mode += "+slo-admission"
     print(f"[{mode}] completed {len(reqs)} requests, {total} tokens "
           f"in {dt:.1f}s over {args.replicas} replicas")
     for i, e in enumerate(engines):

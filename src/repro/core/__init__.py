@@ -15,8 +15,8 @@ from .params import GLBParams
 from .problem import GLBProblem
 from .scheduler import run_sim, GLBRun
 from .executor import run_shardmap, lower_shardmap, GLBDistRun
-from .lifeline import (lifeline_buddies, lifeline_mask, match_steals,
-                       rewire_lifelines, terminated)
+from .lifeline import (diffusion_pairs, lifeline_buddies, lifeline_mask,
+                       match_steals, rewire_lifelines, terminated)
 from .stats import fabric_summary, merge_place_stats
 
 __all__ = [
@@ -28,6 +28,7 @@ __all__ = [
     "run_sim",
     "run_shardmap",
     "lower_shardmap",
+    "diffusion_pairs",
     "lifeline_buddies",
     "lifeline_mask",
     "match_steals",

@@ -96,6 +96,54 @@ def rewire_lifelines(alive, z: int) -> np.ndarray:
     return out
 
 
+def diffusion_pairs(costs, threshold: float, eligible=None):
+    """Proactive donor→recipient pairing for predictive, cost-modeled
+    balancing (DESIGN.md §16; arXiv 1909.07168 / 1308.0148).
+
+    Where :func:`match_steals` is driven by *hungry* places (reactive:
+    somebody already starved), diffusion is driven by *overloaded* ones:
+    with ``costs`` the per-place predicted block-seconds, any place
+    whose cost exceeds ``mean × (1 + threshold)`` becomes a donor and is
+    paired with the cheapest eligible recipient strictly below the mean
+    — moving work toward the balanced state BEFORE starvation fires.
+    The reactive lifeline path stays as the backstop for whatever
+    diffusion mispredicts.
+
+    Pairing is greedy richest-donor-first, each recipient used at most
+    once per pass (the same partial-permutation shape the transfer layer
+    routes), ties broken by place index — deterministic, no PRNG, so the
+    reactive matching's key-fold sequence is untouched by predictive
+    mode. ``eligible`` masks recipients (dead or back-pressured places);
+    donors need no mask because a dead place's cost is 0 and 0 can
+    never exceed the mean threshold of a non-trivial fabric. Returns
+    ``[(donor, recipient), ...]``; empty when balanced."""
+    costs = np.asarray(costs, dtype=np.float64)
+    P = costs.shape[0]
+    if eligible is None:
+        eligible = np.ones(P, dtype=bool)
+    eligible = np.asarray(eligible, dtype=bool)
+    mean = float(costs.mean())
+    if mean <= 0.0:
+        return []
+    hi = mean * (1.0 + threshold)
+    donors = sorted(np.flatnonzero(costs > hi).tolist(),
+                    key=lambda p: (-costs[p], p))
+    takers = sorted(
+        np.flatnonzero(eligible & (costs < mean)).tolist(),
+        key=lambda p: (costs[p], p))
+    pairs = []
+    for d in donors:
+        if not takers:
+            break
+        r = takers.pop(0)
+        if r == d:
+            if not takers:
+                break
+            r = takers.pop(0)
+        pairs.append((d, r))
+    return pairs
+
+
 class MatchResult(NamedTuple):
     src: jax.Array           # (P,) i32 — victim each thief receives from, -1 none
     dst: jax.Array           # (P,) i32 — thief each victim sends to, -1 none

@@ -77,6 +77,10 @@ class Segment:
 
 @dataclass
 class RequestBreakdown:
+    """One request's exhaustive wall-clock waterfall: lifecycle buckets,
+    the segment list behind them, and its preemption/migration/
+    re-admission event counts."""
+
     rid: str
     t_begin: float
     t_end: float
@@ -108,6 +112,9 @@ class RequestBreakdown:
 
 @dataclass
 class ReplicaReport:
+    """One replica's busy/prefill/decode/migrate/idle split over the
+    trace window — the paper's time-computing-vs-distributing row."""
+
     pid: int
     name: str
     window_us: float
@@ -172,7 +179,40 @@ class StealReport:
 
 
 @dataclass
+class TenantPrediction:
+    """Per-tenant decode-length prediction accuracy, from the
+    ``cost_sample`` instants the engine emits at request finish."""
+    tenant: str
+    samples: int = 0
+    mean_abs_err: float = 0.0        # tokens
+    bias: float = 0.0                # mean (predicted - actual), tokens
+
+
+@dataclass
+class PredictionReport:
+    """Prediction-error attribution for the cost model (DESIGN.md §16):
+    how far the decode-length predictions were from reality, per tenant
+    and over time. ``early``/``late`` split the samples chronologically
+    in half — a converging online predictor shows late ≤ early."""
+    samples: int = 0
+    mean_abs_err: float = 0.0        # tokens, all samples
+    bias: float = 0.0                # mean signed error, tokens
+    early_abs_err: float = 0.0       # first half of the run
+    late_abs_err: float = 0.0        # second half of the run
+    tenants: List[TenantPrediction] = field(default_factory=list)
+
+    @property
+    def converging(self) -> bool:
+        return self.samples < 2 or self.late_abs_err <= self.early_abs_err
+
+
+@dataclass
 class TraceAnalysis:
+    """The full analysis of one trace: request waterfalls, replica
+    utilization, steal efficiency, and (when the cost model ran)
+    prediction-error attribution — everything the markdown/JSON
+    renderers and the CI invariants read."""
+
     requests: List[RequestBreakdown]
     replicas: List[ReplicaReport]
     steal: StealReport
@@ -180,6 +220,7 @@ class TraceAnalysis:
     window_us: float
     slo_burn_alerts: int = 0
     flight: Optional[dict] = None
+    prediction: Optional[PredictionReport] = None
 
     def request(self, rid) -> Optional[RequestBreakdown]:
         want = rid if str(rid).startswith("req") else f"req{rid}"
@@ -223,6 +264,8 @@ class TraceAnalysis:
             self.steal.tier2_moves_per_round
         d["steal"]["moved_decode_us_per_kib"] = \
             self.steal.moved_decode_us_per_kib
+        if self.prediction is not None:
+            d["prediction"]["converging"] = self.prediction.converging
         d["bucket_totals"] = self.bucket_totals()
         return d
 
@@ -449,6 +492,45 @@ def _analyze_steal(events: Sequence[dict],
     return rep
 
 
+def _analyze_predictions(events: Sequence[dict]
+                         ) -> Optional[PredictionReport]:
+    """Fold every ``cost_sample`` instant (ts-ordered) into a
+    :class:`PredictionReport`; None when the trace has none (cost model
+    not attached — the report section simply doesn't render)."""
+    samples: List[Tuple[float, str, float, float]] = []
+    for ev in events:
+        if ev.get("ph") != "i" or ev.get("name") != "cost_sample":
+            continue
+        args = ev.get("args") or {}
+        samples.append((ev.get("ts", 0.0), str(args.get("tenant", "")),
+                        float(args.get("predicted", 0.0)),
+                        float(args.get("actual", 0.0))))
+    if not samples:
+        return None
+    samples.sort(key=lambda s: s[0])
+    errs = [p - a for _, _, p, a in samples]
+    half = len(errs) // 2
+    rep = PredictionReport(
+        samples=len(errs),
+        mean_abs_err=sum(abs(e) for e in errs) / len(errs),
+        bias=sum(errs) / len(errs),
+        early_abs_err=(sum(abs(e) for e in errs[:half]) / half
+                       if half else 0.0),
+        late_abs_err=(sum(abs(e) for e in errs[half:])
+                      / max(len(errs) - half, 1)),
+    )
+    by_tenant: Dict[str, List[float]] = {}
+    for (_, tenant, p, a) in samples:
+        by_tenant.setdefault(tenant, []).append(p - a)
+    for tenant in sorted(by_tenant):
+        es = by_tenant[tenant]
+        rep.tenants.append(TenantPrediction(
+            tenant=tenant, samples=len(es),
+            mean_abs_err=sum(abs(e) for e in es) / len(es),
+            bias=sum(es) / len(es)))
+    return rep
+
+
 # ------------------------------------------------------------ entry point
 def analyze_trace(source: Any) -> TraceAnalysis:
     trace = _load(source)
@@ -467,7 +549,8 @@ def analyze_trace(source: Any) -> TraceAnalysis:
         requests=requests, replicas=replicas, steal=steal,
         validator_problems=problems,
         window_us=max(0.0, window[1] - window[0]),
-        slo_burn_alerts=burns, flight=flight)
+        slo_burn_alerts=burns, flight=flight,
+        prediction=_analyze_predictions(events))
 
 
 def check_invariants(analysis: TraceAnalysis,
@@ -587,6 +670,24 @@ def render_markdown(analysis: TraceAnalysis,
             + (", **fabric wedged**" if s.wedged else ""))
     lines.append("")
 
+    if a.prediction is not None:
+        p = a.prediction
+        trend = "converging" if p.converging else "**diverging**"
+        lines += ["## Prediction error", ""]
+        lines.append(
+            f"- {p.samples} scored prediction(s): mean |err| "
+            f"{p.mean_abs_err:.1f} tokens, bias {p.bias:+.1f} "
+            f"(early {p.early_abs_err:.1f} → late {p.late_abs_err:.1f}: "
+            f"{trend})")
+        if p.tenants:
+            lines += ["", "| tenant | samples | mean abs err | bias |",
+                      "|---|---:|---:|---:|"]
+            for t in p.tenants:
+                lines.append(
+                    f"| {t.tenant or '(default)'} | {t.samples} | "
+                    f"{t.mean_abs_err:.1f} | {t.bias:+.1f} |")
+        lines.append("")
+
     p99 = a.p99_request()
     if p99 is not None:
         lines += [f"## Critical path (p99 request: {p99.rid}, "
@@ -633,6 +734,12 @@ def render_summary(analysis: TraceAnalysis) -> str:
             f"  failures: {s.replicas_dead} replica(s) dead, "
             f"{s.readmissions} re-admission(s)"
             + (", fabric WEDGED" if s.wedged else ""))
+    if a.prediction is not None:
+        p = a.prediction
+        lines.append(
+            f"  predictions: {p.samples} scored, mean |err| "
+            f"{p.mean_abs_err:.1f} tokens "
+            f"(early {p.early_abs_err:.1f} → late {p.late_abs_err:.1f})")
     p99 = a.p99_request()
     if p99 is not None:
         lines.append(f"  p99 request {p99.rid}: {_us(p99.wall_us)} "

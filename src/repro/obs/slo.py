@@ -141,6 +141,14 @@ class SLOMonitor:
         if pid is not None and self.pid == 0:
             self.pid = pid
 
+    def target_ms(self, metric: str) -> Optional[float]:
+        """Declared threshold for ``metric`` in ms, or None when no
+        target was declared — the scheduler's SLO-aware admission
+        (DESIGN.md §16) reads its TTFT/queue-wait budgets through this
+        instead of poking at ``targets`` directly."""
+        t = self.targets.get(metric)
+        return t.threshold_ms if t is not None else None
+
     # ------------------------------------------------------------- feeding
     def observe(self, metric: str, value_ms: float,
                 ts_us: Optional[float] = None) -> None:

@@ -3,6 +3,8 @@ multi-token decode steps, on-device sampling, split-KV/paged flash-decode
 attention), paged KV-cache pool, radix prefix cache (shared-prefix KV
 reuse + chunked prefill), admission/preemption scheduler, and the GLB
 replica balancer."""
+from .cost import (CostModel, CostParams,  # noqa: F401
+                   DecodeLengthPredictor)
 from .engine import Engine, GLBReplicaBalancer, Request  # noqa: F401
 from .faults import Fault, FaultInjector  # noqa: F401
 from .kvpool import KVPool, PoolExhausted, PoolStats  # noqa: F401

@@ -63,9 +63,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (GLBParams, fabric_summary, lifeline_buddies,
-                        match_steals, merge_place_stats, rewire_lifelines,
-                        terminated)
+from repro.core import (GLBParams, diffusion_pairs, fabric_summary,
+                        lifeline_buddies, match_steals, merge_place_stats,
+                        rewire_lifelines, terminated)
 from repro.core.autotune import paged_block_kv
 from repro.models import (decode_step, forward, make_cache,
                           make_paged_cache, sample_tokens)
@@ -80,11 +80,23 @@ from .scheduler import ContinuousBatchingScheduler
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: prompt tokens in, up to ``max_new`` decoded
+    tokens out, plus the lifecycle stamps the observability and cost
+    layers read. The same object travels with the request through
+    steals, migrations, and crash re-admission — whoever holds it owns
+    the request."""
+
     rid: int
     prompt: List[int]
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Cost-model inputs (DESIGN.md §16): the tenant keys the per-tenant
+    # decode-length histogram; predicted_decode is the at-submit length
+    # prediction (-1 = never stamped), kept across re-submits like
+    # t_submit so finish-time scoring judges the ORIGINAL prediction.
+    tenant: str = ""
+    predicted_decode: float = -1.0
     # Observability stamps (obs clock domain, µs): submission, the last
     # time the request entered a queue (submit / preempt / migrate
     # requeue), and the first output token (TTFT anchor).
@@ -275,6 +287,13 @@ def _make_chunk_fn(cfg: ModelConfig, temperature: float):
 
 
 class Engine:
+    """One serving replica: continuous batching over a fixed pool of
+    decode slots, jitted multi-token decode between host syncs, and —
+    with ``paged=True`` — the paged KV subsystem (block pool, scheduler,
+    radix prefix cache, chunked prefill, live migration). See the module
+    docstring for the architecture; a fabric of Engines is driven by
+    :class:`GLBReplicaBalancer`."""
+
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
                  max_seq: int = 256, pad_len: int = 32,
                  steps_per_sync: int = 8, temperature: float = 0.0,
@@ -287,6 +306,7 @@ class Engine:
                  prefill_chunk: Optional[int] = None,
                  shed_policy: str = "youngest",
                  tracer=None, metrics=None, slo=None,
+                 slo_admission: bool = False, cost_model=None,
                  replica_id: int = 0):
         self.cfg = cfg
         self.params = params
@@ -303,6 +323,13 @@ class Engine:
         # latencies the histograms get; one monitor is shared fabric-wide
         # the way the tracer is.
         self.slo = slo
+        # Optional CostModel (serve.cost, DESIGN.md §16): stamps a
+        # decode-length prediction at submit and scores it at finish.
+        # Shared fabric-wide like the tracer/SLO monitor; None costs one
+        # attribute check per request boundary.
+        self.cost_model = cost_model
+        if slo_admission and not paged:
+            raise ValueError("slo_admission needs the paged scheduler")
         self.replica_id = replica_id
         if self.tracer.enabled:
             self.tracer.process_name(replica_id, f"replica {replica_id}")
@@ -359,6 +386,7 @@ class Engine:
                 token_budget=token_budget, prefill_chunk=prefill_chunk,
                 cache=self.prefix_cache, shed_policy=shed_policy,
                 tracer=self.tracer, metrics=self.metrics, slo=self.slo,
+                slo_admission=slo_admission, cost_model=cost_model,
                 pid=replica_id,
             )
             self.cache = make_paged_cache(
@@ -400,11 +428,46 @@ class Engine:
                                   args={"prompt_tokens": len(req.prompt),
                                         "max_new": req.max_new})
             self.tracer.req_phase(req.rid, "queued", pid=self.replica_id)
+        if self.cost_model is not None:
+            self.cost_model.stamp(req)
         self.queue.append(req)
 
     @property
     def load(self) -> int:
         return len(self.queue) + sum(s is not None for s in self.slots)
+
+    # --------------------------------------------------------- cost model
+    def request_cost(self, req: Request, queued: bool) -> float:
+        """Predicted remaining block-seconds for one request ON THIS
+        replica (requires a cost model). A queued request is priced at
+        its full recompute prefix minus this replica's radix-cache hit
+        length plus its predicted decode; a running one at its remaining
+        decode only — so the same request is cheaper on a replica whose
+        cache already holds its prefix, which is exactly the signal the
+        diffusive balancer wants."""
+        cm = self.cost_model
+        bs = self.block_size if self.paged else self.max_seq
+        if queued:
+            ptoks = self._prefix_tokens(req)
+            cached = (self.prefix_cache.hit_length(ptoks)
+                      if self.prefix_cache is not None else 0)
+            return cm.estimate(len(ptoks), cached, 0, req.tenant,
+                               req.max_new, bs)
+        return cm.estimate(min(len(req.prompt), self.pad_len), 0,
+                           len(req.out), req.tenant, req.max_new, bs)
+
+    @property
+    def predicted_cost(self) -> float:
+        """This replica's entry in the predictive load vector: summed
+        predicted remaining block-seconds over its queue and running
+        slots (0.0 without a cost model — the balancer falls back to
+        integer counts)."""
+        if self.cost_model is None:
+            return 0.0
+        cost = sum(self.request_cost(r, True) for r in self.queue)
+        cost += sum(self.request_cost(r, False)
+                    for r in self.slots if r is not None)
+        return cost
 
     @property
     def free_slots(self) -> int:
@@ -494,6 +557,19 @@ class Engine:
                 self.metrics.histogram("tpot_ms").observe(tpot_ms)
                 if self.slo is not None:
                     self.slo.observe("tpot_ms", tpot_ms)
+            if self.cost_model is not None:
+                # Close the prediction loop: score the stamped estimate
+                # and feed the actual length back into the per-tenant
+                # histogram. The cost_sample instant is what the
+                # analyzer's prediction-error attribution parses.
+                err = self.cost_model.observe_finish(req)
+                if self.tracer.enabled and err is not None:
+                    self.tracer.instant(
+                        "cost_sample", pid=self.replica_id,
+                        args={"rid": req.rid, "tenant": req.tenant,
+                              "predicted": round(req.predicted_decode, 1),
+                              "actual": len(req.out),
+                              "err": round(err, 1)})
             if self.tracer.enabled:
                 self.tracer.req_end(req.rid, pid=self.replica_id,
                                     args={"tokens": len(req.out)})
@@ -1074,11 +1150,35 @@ class GLBReplicaBalancer:
     def __init__(self, engines: List[Engine],
                  params: GLBParams = GLBParams(),
                  migrate: bool = False, tracer=None, slo=None,
-                 faults=None, heartbeat_misses: Optional[int] = None):
+                 faults=None, heartbeat_misses: Optional[int] = None,
+                 cost_model=None, predictive: bool = False,
+                 imbalance_threshold: float = 0.25):
         self.engines = engines
         self.params = params
         self.migrate = migrate
         self.faults = faults
+        # Predictive, cost-modeled balancing (DESIGN.md §16): with a
+        # cost model attached the load vector can become predicted
+        # block-seconds and a diffusive pre-pass moves work while any
+        # replica exceeds the mean by ``imbalance_threshold`` — BEFORE
+        # starvation fires; the reactive lifeline path below stays as
+        # the backstop. predictive=False is the reactive-parity
+        # contract: every decision site runs the exact pre-cost code
+        # path (the model then only stamps/scores predictions).
+        if predictive and cost_model is None:
+            raise ValueError("predictive balancing requires a cost_model")
+        self.cost_model = cost_model
+        self.predictive = predictive
+        self.imbalance_threshold = imbalance_threshold
+        self.diffusion_moves = 0       # moves made by the diffusive pass
+        # Decision log: one tuple per steal/shed/diffusion decision, in
+        # execution order — the reactive-parity regression and the bench
+        # parity row compare these across balancer configurations.
+        self.decisions: List[tuple] = []
+        if cost_model is not None:
+            for e in engines:
+                if e.cost_model is None:
+                    e.cost_model = cost_model
         self.heartbeat_misses = (heartbeat_misses if heartbeat_misses
                                  is not None else params.heartbeat_misses)
         # Fabric-level trace track: supersteps, the load vector, steal
@@ -1120,6 +1220,7 @@ class GLBReplicaBalancer:
         self._alive = [True] * P
         self._misses = [0] * P          # consecutive missed heartbeats
         self._last_load = [0] * P       # load at last answered gather
+        self._last_cost = [0.0] * P     # predicted cost, same stand-in rule
         self._ledger: dict = {}         # rid -> Request, every submission
         self.replicas_dead = 0
         self.readmitted_queued = 0
@@ -1190,6 +1291,17 @@ class GLBReplicaBalancer:
         it lands live, radix-seeded, or as a recompute resume."""
         cands = [s for s in victim.migratable_slots()
                  if thief.can_host(int(victim.lens[s]))]
+        if self.predictive:
+            # Cost-weighted shedding: move the sequences with the most
+            # predicted work left (rid tie-break), not the shed policy's
+            # cheapest-transfer order — maximizing offloaded block-
+            # seconds per migration. Predictive mode only; the default
+            # path keeps the policy order bit-for-bit.
+            cands = sorted(
+                cands,
+                key=lambda s: (-victim.request_cost(victim.slots[s],
+                                                    False),
+                               victim.slots[s].rid))
         running = sum(s is not None for s in victim.slots)
         sheddable = max(len(cands) - 1, 0)      # victim keeps one running
         # GLB steal-half: ship half the victim's running set, bounded by
@@ -1202,15 +1314,129 @@ class GLBReplicaBalancer:
             # counted so tests (and ops) can see residual mismatches.
             self.sterile_steals += 1
         for slot in cands[:take]:
+            rid = victim.slots[slot].rid
             mode = thief.migrate_in(victim.migrate_out(slot))
             self.migrations += 1
             self.migration_modes[mode] += 1
+            self.decisions.append(("live", victim.replica_id,
+                                   thief.replica_id, rid, mode))
             if self.tracer.enabled:
                 self.tracer.instant(
                     "steal_live", pid=self._fabric_pid,
                     args={"victim": victim.replica_id,
                           "thief": thief.replica_id, "mode": mode},
                 )
+
+    # ------------------------------------------- predictive diffusion
+    def _fabric_costs(self) -> np.ndarray:
+        """The predictive load vector: per-replica summed predicted
+        block-seconds, gathered with the same stand-in rule as the
+        integer loads (an unresponsive replica's last-known cost holds;
+        a dead one reads 0)."""
+        costs = np.zeros(len(self.engines))
+        for i, e in enumerate(self.engines):
+            if not self._alive[i]:
+                continue
+            if not self._responsive(i):
+                costs[i] = self._last_cost[i]
+                continue
+            self._last_cost[i] = e.predicted_cost
+            costs[i] = self._last_cost[i]
+        return costs
+
+    def _diffuse(self, active: List[bool]) -> None:
+        """The diffusive pre-pass (DESIGN.md §16): pair replicas whose
+        predicted cost exceeds the fabric mean by ``imbalance_threshold``
+        with under-mean recipients (``core.diffusion_pairs``) and move
+        work toward the mean — queued requests chosen greedily to
+        minimize post-move cost imbalance, then at most one live
+        sequence per pair as the tier-2 analogue. Runs BEFORE the
+        reactive matching each pass, so starvation-driven stealing
+        remains the backstop for whatever the predictions miss."""
+        costs = self._fabric_costs()
+        if self.tracer.enabled:
+            self.tracer.counter(
+                "fabric_cost",
+                {f"replica{i}": round(float(c), 3)
+                 for i, c in enumerate(costs)},
+                pid=self._fabric_pid,
+            )
+        eligible = np.asarray(
+            [active[i] and self.engines[i].can_accept()
+             for i in range(len(self.engines))]
+        )
+        pairs = diffusion_pairs(costs, self.imbalance_threshold, eligible)
+        mean = float(costs.mean())
+        for d, r in pairs:
+            if active[d]:
+                self._diffuse_pair(d, r, costs, mean)
+
+    def _diffuse_pair(self, d: int, r: int, costs: np.ndarray,
+                      mean: float) -> None:
+        """Move work donor ``d`` → recipient ``r`` until the donor drops
+        back under the diffusion threshold: queued requests first (each
+        pick minimizes ``|donor-mean| + |recipient-mean|`` after the
+        move, rid tie-break, and a move must strictly improve it), then
+        at most one live sequence when the donor's queue had nothing to
+        give. Cost updates are local to the gathered vector — the next
+        pass re-gathers from the engines."""
+        donor, recip = self.engines[d], self.engines[r]
+        hi = mean * (1.0 + self.imbalance_threshold)
+        moved = 0
+        while donor.queue and costs[d] > hi and recip.can_accept():
+            cur = abs(costs[d] - mean) + abs(costs[r] - mean)
+            best = best_c = None
+            best_key = None
+            for req in donor.queue:
+                c = donor.request_cost(req, True)
+                gain = cur - (abs(costs[d] - c - mean)
+                              + abs(costs[r] + c - mean))
+                key = (gain, -req.rid)
+                if gain > 1e-9 and (best_key is None or key > best_key):
+                    best, best_c, best_key = req, c, key
+            if best is None:
+                break
+            donor.queue.remove(best)
+            recip.submit(best)
+            costs[d] -= best_c
+            costs[r] += best_c
+            self.queue_moves += 1
+            self.diffusion_moves += 1
+            moved += 1
+            self.decisions.append(("diffuse", d, r, best.rid))
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "diffuse_queued", pid=self._fabric_pid,
+                    args={"donor": donor.replica_id,
+                          "recipient": recip.replica_id,
+                          "rid": best.rid,
+                          "cost": round(best_c, 3)})
+        if (moved == 0 and costs[d] > hi and self.migrate
+                and donor.paged and recip.paged and recip.free_slots > 0
+                and donor.free_slots == 0 and not donor.queue):
+            cands = [s for s in donor.migratable_slots()
+                     if recip.can_host(int(donor.lens[s]))]
+            if len(cands) > 1:          # the donor keeps one running
+                slot = min(cands,
+                           key=lambda s: (-donor.request_cost(
+                               donor.slots[s], False),
+                               donor.slots[s].rid))
+                rid = donor.slots[slot].rid
+                c = donor.request_cost(donor.slots[slot], False)
+                mode = recip.migrate_in(donor.migrate_out(slot))
+                costs[d] -= c
+                costs[r] += c
+                self.migrations += 1
+                self.migration_modes[mode] += 1
+                self.diffusion_moves += 1
+                self.decisions.append(("diffuse_live", d, r, rid, mode))
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "diffuse_live", pid=self._fabric_pid,
+                        args={"donor": donor.replica_id,
+                              "recipient": recip.replica_id,
+                              "rid": rid, "mode": mode,
+                              "cost": round(c, 3)})
 
     # ------------------------------------------------- failure detection
     def _responsive(self, i: int) -> bool:
@@ -1393,6 +1619,14 @@ class GLBReplicaBalancer:
         # around them; pending edges toward them were cleared at death.
         active = [self._alive[i] and self._responsive(i)
                   for i in range(len(self.engines))]
+        if self.predictive:
+            # Diffusive pre-pass on predicted cost — proactive moves
+            # first, the reactive matching below mops up anything the
+            # predictions missed (including replicas the diffusion left
+            # starving). Strictly additive: with predictive off nothing
+            # here runs and the pass below is byte-identical to the
+            # pre-cost balancer.
+            self._diffuse(active)
         thieves = [e for i, e in enumerate(self.engines)
                    if active[i] and e.can_accept() and len(e.queue) == 0]
         sizes = np.asarray(
@@ -1419,11 +1653,28 @@ class GLBReplicaBalancer:
                 # Tier 1: steal queued (unstarted) requests first.
                 take = max(1, len(v.queue) // 2)
                 took = min(take, len(v.queue))
-                for _ in range(took):
-                    # Oldest-first: stolen requests keep their arrival
-                    # order on the thief, not the victim's inverted tail.
-                    self.engines[thief].submit(v.queue.popleft())
-                    self.queue_moves += 1
+                if self.predictive:
+                    # Cost-weighted selection: ship the most expensive
+                    # queued requests (rid tie-break) so each steal
+                    # moves the most predicted work. Predictive-only
+                    # branch; the default path below is untouched.
+                    ranked = sorted(
+                        v.queue,
+                        key=lambda q: (-v.request_cost(q, True), q.rid))
+                    for q in ranked[:took]:
+                        v.queue.remove(q)
+                        self.engines[thief].submit(q)
+                        self.queue_moves += 1
+                else:
+                    for _ in range(took):
+                        # Oldest-first: stolen requests keep their
+                        # arrival order on the thief, not the victim's
+                        # inverted tail.
+                        self.engines[thief].submit(v.queue.popleft())
+                        self.queue_moves += 1
+                self.decisions.append(("q", v.replica_id,
+                                       self.engines[thief].replica_id,
+                                       took))
                 if self.tracer.enabled:
                     self.tracer.instant(
                         "steal_queued", pid=self._fabric_pid,
@@ -1484,6 +1735,7 @@ class GLBReplicaBalancer:
             "moves": self.moves,
             "queue_moves": self.queue_moves,
             "migrations": self.migrations,
+            "diffusion_moves": self.diffusion_moves,
             "sterile_steals": self.sterile_steals,
             "supersteps": self.supersteps,
             "replicas_dead": self.replicas_dead,
@@ -1493,6 +1745,8 @@ class GLBReplicaBalancer:
         }
         if self.slo is not None:
             merged["_slo"] = self.slo.snapshot()
+        if self.cost_model is not None:
+            merged["_cost"] = self.cost_model.snapshot()
         return merged
 
     def merged_metrics(self) -> MetricsRegistry:
@@ -1521,6 +1775,14 @@ class GLBReplicaBalancer:
             f"{self.migration_modes['recompute']} recompute), "
             f"{self.supersteps} supersteps, terminated={self.terminated}"
         )
+        if self.predictive:
+            cm = self.cost_model
+            lines.append(
+                f"  predictive: {self.diffusion_moves} diffusion moves "
+                f"(threshold {self.imbalance_threshold:g}), "
+                f"{len(cm.errors)} predictions scored, "
+                f"mean |err| {cm.mean_abs_error():.1f} tokens"
+            )
         if self.replicas_dead:
             lines.append(
                 f"  failures: {self.replicas_dead} replica(s) dead, "

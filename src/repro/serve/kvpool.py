@@ -56,6 +56,9 @@ class PoolExhausted(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class PoolStats:
+    """Point-in-time snapshot of the block pool's occupancy and
+    fragmentation (returned by ``KVPool.stats()``)."""
+
     num_blocks: int
     block_size: int
     live_blocks: int          # blocks with refcount > 0

@@ -73,6 +73,12 @@ class _Node:
 
 
 class RadixPrefixCache:
+    """Block-aligned radix tree over token sequences mapping shared
+    prefixes to the refcounted pool blocks that already hold their KV —
+    lookups via :meth:`probe`/:meth:`fork`, population via
+    :meth:`insert` on sequence release, reclamation via LRU leaf
+    :meth:`evict` (see module docstring for the full invariants)."""
+
     def __init__(self, pool: KVPool, tracer=None, pid: int = 0):
         self.pool = pool
         self.bs = pool.block_size
@@ -144,6 +150,17 @@ class RadixPrefixCache:
     def match(self, tokens) -> Tuple[int, List[int]]:
         p, blocks, _ = self.probe(tokens)
         return p, blocks
+
+    def hit_length(self, tokens) -> int:
+        """Read-only cached-prefix length for ``tokens`` (the cost
+        model's cache-credit input, DESIGN.md §16): how many prefill
+        positions this replica would serve from cached blocks if the
+        request were admitted right now. Same walk and same
+        ``len(tokens)-1`` cap as :meth:`probe`; no refcounts move and
+        the LRU clock is untouched, so pricing a request on every
+        balance pass cannot perturb eviction order."""
+        p, _, _ = self.probe(tokens)
+        return p
 
     def fork(self, sid: int, tokens, probe=None) -> int:
         """Commit a hit: adopt the matched blocks into sequence ``sid``

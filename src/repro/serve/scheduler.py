@@ -68,6 +68,12 @@ _INF = 1 << 30
 
 @dataclasses.dataclass
 class StepPlan:
+    """One engine step's worth of scheduling decisions: who prefills
+    (single-shot or chunked), who was preempted, which COW copies the
+    engine must apply, and each slot's decode mask/reservation/quota.
+    Produced by :meth:`ContinuousBatchingScheduler.plan_step`; the
+    engine applies the device-side effects."""
+
     admit: List[Tuple[int, object]]          # (slot, request) single-shot
                                              # prefill (legacy path)
     prefill: List[Tuple[int, object, int, int, bool]]
@@ -102,8 +108,28 @@ class ContinuousBatchingScheduler:
                  token_budget: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  cache=None, shed_policy: str = "youngest",
-                 tracer=None, metrics=None, slo=None, pid: int = 0):
+                 tracer=None, metrics=None, slo=None,
+                 slo_admission: bool = False, cost_model=None,
+                 pid: int = 0):
         assert shed_policy in ("youngest", "budget"), shed_policy
+        # SLO-aware admission (DESIGN.md §16): order the queue by TTFT
+        # slack and pace non-urgent admissions. Off by default — the
+        # default path must stay strictly FIFO, byte-identical to a
+        # scheduler built without the flag.
+        if slo_admission:
+            if slo is None:
+                raise ValueError("slo_admission requires an SLOMonitor")
+            tgt = slo.target_ms("ttft_ms")
+            if tgt is None:
+                tgt = slo.target_ms("queue_wait_ms")
+            if tgt is None:
+                raise ValueError(
+                    "slo_admission needs a ttft_ms or queue_wait_ms "
+                    "target on the SLOMonitor")
+            self._slo_target_ms = tgt
+        self.slo_admission = slo_admission
+        self.cost_model = cost_model
+        self.paced_deferrals = 0               # admissions delayed by pacing
         # Observability: the engine hands down its tracer/registry so
         # admission/preemption events land on the owning replica's track
         # (pid) and queue-wait is observed where the commit happens.
@@ -174,6 +200,18 @@ class ContinuousBatchingScheduler:
         self._order[slot] = self._admit_seq
         self._admit_seq += 1
         self.adoptions += 1
+
+    def _admission_slack_ms(self, req, prefix_len: int,
+                            now_ref: float) -> float:
+        """TTFT budget left for a queued request: declared target minus
+        time already queued minus the cost model's predicted prefill
+        service time (0 without a model). Negative = the target is
+        already blown; smallest slack = most urgent."""
+        waited = ((now_ref - req.t_queued) / 1e3
+                  if getattr(req, "t_queued", 0.0) else 0.0)
+        predicted = (self.cost_model.prefill_ms(prefix_len)
+                     if self.cost_model is not None else 0.0)
+        return self._slo_target_ms - waited - predicted
 
     def can_admit(self, prefix_len: int, engine_empty: bool) -> bool:
         """The balancer's hunger signal (``Engine.can_accept``): does a
@@ -314,10 +352,40 @@ class ContinuousBatchingScheduler:
         # 2) FIFO admission while slots, blocks, and token budget allow.
         free_slots = deque(i for i in range(self.max_slots)
                            if slots[i] is None)
+        # SLO-aware mode replaces arrival order with slack order (most
+        # urgent first, rid tie-break — stable and deterministic) and
+        # paces the relaxed tail: once one non-urgent request (slack >
+        # half the target) has been admitted this step while work is
+        # already running, further non-urgent admissions wait a step so
+        # running decodes keep their token-budget share. Urgent requests
+        # are never paced. Everything here is behind the flag: with
+        # slo_admission off this block is dead code and admission stays
+        # strictly FIFO.
+        relaxed_admitted = 0
+        now_ref = now_us() if self.slo_admission else 0.0
+        if self.slo_admission and len(queue) > 1:
+            ordered = sorted(
+                queue,
+                key=lambda r: (self._admission_slack_ms(
+                    r, len(prefix_tokens_of(r)), now_ref), r.rid))
+            queue.clear()
+            queue.extend(ordered)
         while queue and free_slots and budget_left > 0:
             req = queue[0]
             ptoks = prefix_tokens_of(req)
             prefix = len(ptoks)
+            if self.slo_admission:
+                slack = self._admission_slack_ms(req, prefix, now_ref)
+                relaxed = slack > 0.5 * self._slo_target_ms
+                if (relaxed and relaxed_admitted >= 1
+                        and any(s is not None for s in slots)):
+                    self.paced_deferrals += 1
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "admission_paced", pid=self.pid,
+                            args={"rid": req.rid,
+                                  "slack_ms": round(slack, 3)})
+                    break
             target = min(prefix + self.lookahead, self.max_seq)
             floor = (0 if all(s is None for s in slots)
                      else self.watermark)
@@ -384,6 +452,8 @@ class ContinuousBatchingScheduler:
             self._order[slot] = self._admit_seq
             self._admit_seq += 1
             self.admissions += 1
+            if self.slo_admission and relaxed:
+                relaxed_admitted += 1
             # Admission commit: the request leaves the queue here, for
             # both the chunked and legacy paths — the one site where
             # queue wait ends and the prefill phase begins.

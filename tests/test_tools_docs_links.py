@@ -1,0 +1,82 @@
+"""The CI docs link checker must resolve good relative links and
+GitHub-style anchors, and flag dangling files/anchors — on synthetic
+trees and on the repo's real docs."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "tools"))
+from check_docs_links import check, slugify  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _tree(tmp_path, files):
+    for rel, content in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content)
+    return str(tmp_path)
+
+
+def test_slugify_github_rules():
+    assert slugify("Predictive balancing (cost model)") \
+        == "predictive-balancing-cost-model"
+    assert slugify("§14 Trace analytics & SLO (obs/analyze)") \
+        == "14-trace-analytics--slo-obsanalyze"
+    assert slugify("`code` and **bold**") == "code-and-bold"
+
+
+def test_good_links_and_anchors_pass(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "# T\n[a](docs/a.md)\n[s](DESIGN.md#my-section)\n",
+        "DESIGN.md": "# D\n## My section\n",
+        "docs/a.md": "# A\n[back](../README.md)\n[self](#a)\n",
+    })
+    _, problems = check(root)
+    assert problems == []
+
+
+def test_dangling_file_and_anchor_flagged(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "# T\n[gone](docs/missing.md)\n"
+                     "[bad](DESIGN.md#no-such-heading)\n",
+        "DESIGN.md": "# D\n## Real heading\n",
+    })
+    _, problems = check(root)
+    assert len(problems) == 2
+    assert any("dangling link" in p for p in problems)
+    assert any("dangling anchor" in p for p in problems)
+
+
+def test_code_fences_ignored(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "# T\n```python\nx = d[(broken](nope.md)\n```\n",
+    })
+    _, problems = check(root)
+    assert problems == []
+
+
+def test_duplicate_headings_get_suffixes(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "# T\n## Gates\n## Gates\n[g2](#gates-1)\n",
+    })
+    _, problems = check(root)
+    assert problems == []
+
+
+@pytest.mark.parametrize("as_cli", [False, True])
+def test_repo_docs_resolve(as_cli):
+    """The committed README/docs/DESIGN must pass their own gate."""
+    if as_cli:
+        r = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tools",
+                                          "check_docs_links.py"), REPO],
+            capture_output=True, text=True)
+        assert r.returncode == 0, r.stderr
+    else:
+        _, problems = check(REPO)
+        assert problems == []

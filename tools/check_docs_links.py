@@ -1,0 +1,119 @@
+"""Docs link checker (stdlib-only, CI lint step): every relative
+markdown link and ``#anchor`` fragment in README.md, DESIGN.md, and
+``docs/**/*.md`` must resolve — a dangling link or a heading that was
+renamed without its references fails the build.
+
+Anchors are computed with GitHub's heading-slug rules (lowercase, strip
+punctuation, spaces to hyphens, ``-N`` suffixes for duplicates), so a
+link that works here works on the rendered page. External links
+(``http(s)://``, ``mailto:``) are not fetched — this gate is about
+*our* files agreeing with each other, offline and deterministic.
+
+  python tools/check_docs_links.py [root]
+"""
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE = re.compile(r"^(```|~~~)")
+# GitHub slugger keeps word chars (unicode), spaces, and hyphens;
+# everything else is dropped before spaces become hyphens.
+SLUG_DROP = re.compile(r"[^\w\s-]", re.UNICODE)
+INLINE_MD = re.compile(r"[`*]|\[([^\]]*)\]\([^)]*\)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for one heading line's text."""
+    text = INLINE_MD.sub(lambda m: m.group(1) or "", heading)
+    text = SLUG_DROP.sub("", text.lower())
+    return text.strip().replace(" ", "-")
+
+
+def md_files(root: str):
+    out = []
+    for name in ("README.md", "DESIGN.md"):
+        p = os.path.join(root, name)
+        if os.path.exists(p):
+            out.append(p)
+    docs = os.path.join(root, "docs")
+    for dirpath, _, names in os.walk(docs):
+        out.extend(os.path.join(dirpath, n)
+                   for n in sorted(names) if n.endswith(".md"))
+    return out
+
+
+def parse(path: str):
+    """-> (anchors, links). links = [(lineno, target)]; fenced code
+    blocks contribute neither (a ```python sample isn't a link)."""
+    anchors, links, seen = set(), [], {}
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING.match(line)
+            if m:
+                slug = slugify(m.group(2))
+                n = seen.get(slug, 0)
+                seen[slug] = n + 1
+                anchors.add(slug if n == 0 else f"{slug}-{n}")
+            for lm in LINK.finditer(line):
+                links.append((lineno, lm.group(1)))
+    return anchors, links
+
+
+def check(root: str):
+    files = md_files(root)
+    anchors = {os.path.abspath(p): parse(p)[0] for p in files}
+    problems = []
+    for path in files:
+        _, links = parse(path)
+        base = os.path.dirname(os.path.abspath(path))
+        rel = os.path.relpath(path, root)
+        for lineno, target in links:
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = (os.path.abspath(path) if not target
+                    else os.path.abspath(os.path.join(base, target)))
+            if not os.path.exists(dest):
+                problems.append(f"{rel}:{lineno}: dangling link "
+                                f"-> {target}")
+                continue
+            if frag is not None:
+                dest_anchors = anchors.get(dest)
+                if dest_anchors is None:
+                    dest_anchors = (parse(dest)[0]
+                                    if dest.endswith(".md") else set())
+                    anchors[dest] = dest_anchors
+                if frag not in dest_anchors:
+                    problems.append(
+                        f"{rel}:{lineno}: dangling anchor "
+                        f"-> {target or os.path.basename(dest)}#{frag}")
+    return files, problems
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    files, problems = check(root)
+    if problems:
+        print(f"docs link check: {len(problems)} problem(s)",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    n_links = sum(len(parse(p)[1]) for p in files)
+    print(f"docs link check: {len(files)} file(s), {n_links} link(s), "
+          f"all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
